@@ -1,0 +1,56 @@
+"""Ingestion speedup benchmark (paper Fig. 5).
+
+The paper ingests from HDFS (co-located), Swift (same DC) and S3 (remote);
+speedup = T(1 worker) / T(N workers).  Latency profiles emulate the three
+backends; parallel ingestion uses worker threads (latency-bound, so thread
+scaling is honest even on one core)."""
+from __future__ import annotations
+
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List
+
+import numpy as np
+
+sys.path.insert(0, "src")
+from repro.data import SyntheticText  # noqa: E402
+
+BACKENDS = {
+    # (latency_s per doc, jitter_s) — co-located / same-DC / remote
+    "hdfs": (0.0002, 0.0),
+    "swift": (0.001, 0.0002),
+    "s3": (0.004, 0.002),
+}
+
+
+def ingest(backend: str, workers: int, docs: int = 128) -> float:
+    lat, jit = BACKENDS[backend]
+
+    def pull(shard):
+        src = SyntheticText(1000, doc_len=64, num_docs=docs // workers,
+                            seed=shard, latency_s=lat, jitter_s=jit)
+        return [d for d in src]
+
+    t0 = time.monotonic()
+    with ThreadPoolExecutor(max_workers=workers) as ex:
+        list(ex.map(pull, range(workers)))
+    return time.monotonic() - t0
+
+
+def main() -> List[Dict]:
+    rows = []
+    for backend in BACKENDS:
+        t1 = None
+        for n in (1, 2, 4, 8, 16):
+            t = ingest(backend, n)
+            t1 = t1 or t
+            rows.append({"backend": backend, "workers": n, "t": t,
+                         "speedup": t1 / t})
+            print(f"ingestion,{backend},workers={n},t={t:.3f},"
+                  f"speedup={t1/t:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

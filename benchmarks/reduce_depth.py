@@ -1,0 +1,59 @@
+"""Reduce-tree depth K trade-off (paper §1.2.2 'the user may chose a
+higher tree depth').
+
+For the MaRe gradient tree: wire bytes per K from (a) the analytic model
+(collective_bytes_tree) and (b) the lowered HLO of tree_allreduce at 8
+shards, plus the fused psum reference."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(__file__)
+
+WORKER = r'''
+import os, json, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, AxisType
+sys.path.insert(0, "src")
+from repro.core.tree_reduce import tree_allreduce, fused_allreduce, collective_bytes_tree
+from repro.launch.hlo_cost import analyze
+mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+x = jax.ShapeDtypeStruct((1<<20,), jnp.float32)   # 4 MiB gradient
+rows = []
+for depth in (1, 2, 3):
+    low = jax.jit(jax.shard_map(lambda g: tree_allreduce(g, "data", 8, depth=depth),
+                  mesh=mesh, in_specs=P(), out_specs=P(),
+                  check_vma=False)).lower(x)
+    w = analyze(low.compile().as_text())
+    rows.append({"k": depth, "wire": w["wire_bytes"],
+                 "analytic": collective_bytes_tree(x.size*4, 8, depth)})
+low = jax.jit(jax.shard_map(lambda g: fused_allreduce(g, "data"),
+              mesh=mesh, in_specs=P(), out_specs=P(),
+                  check_vma=False)).lower(x)
+w = analyze(low.compile().as_text())
+rows.append({"k": "fused_psum", "wire": w["wire_bytes"], "analytic": None})
+print(json.dumps(rows))
+'''
+
+
+def main():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(os.path.join(HERE, "..", "src"))
+    out = subprocess.run([sys.executable, "-c", WORKER], env=env,
+                         capture_output=True, text=True, timeout=600,
+                         cwd=os.path.join(HERE, ".."))
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-2000:])
+    rows = json.loads(out.stdout.strip().splitlines()[-1])
+    for r in rows:
+        print(f"reduce_depth,K={r['k']},wire_bytes={r['wire']:.3e},"
+              f"analytic={r['analytic']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

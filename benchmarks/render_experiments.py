@@ -1,0 +1,40 @@
+"""Inject the baseline/optimized roofline tables into EXPERIMENTS.md."""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from roofline import build_table, load  # noqa: E402
+
+
+def md_table(rows) -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | useful | roofline frac | peak GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
+            f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.3f} | {r['peak_mem_gb']:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    rows = load()
+    base = build_table(rows, multi_pod=False, tag="baseline")
+    opt = build_table(rows, multi_pod=False, tag="optimized")
+    path = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+    text = open(path).read()
+    text = text.replace("<!-- BASELINE_TABLE -->", md_table(base), 1)
+    text = text.replace("<!-- OPTIMIZED_TABLE -->", md_table(opt), 1)
+    open(path, "w").write(text)
+    print(f"injected {len(base)} baseline + {len(opt)} optimized rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Roofline table builder: reads reports/dryrun.jsonl and emits the
+per-cell three-term analysis (EXPERIMENTS.md §Roofline).
+
+MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE) for train cells,
+2 N D (+ attention KV term) for prefill, 2 N per token for decode.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config, get_shape  # noqa: E402
+from repro.models.common import (active_param_count,  # noqa: E402
+                                 param_count_analytic)
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def model_flops_global(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    n_active = active_param_count(cfg)
+    d_tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * d_tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * d_tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def load(path: str = "reports/dryrun.jsonl") -> List[Dict]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            rows.append(json.loads(line))
+    return rows
+
+
+def build_table(rows: List[Dict], multi_pod: Optional[bool] = False,
+                tag: Optional[str] = None) -> List[Dict]:
+    out = []
+    seen = {}
+    for r in rows:
+        if multi_pod is not None and r.get("multi_pod", False) != multi_pod:
+            continue
+        if tag is not None and r.get("tag") != tag:
+            continue
+        seen[(r["arch"], r["shape"])] = r       # last write wins
+    for (arch, shape), r in sorted(seen.items()):
+        n = r["n_chips"]
+        comp = r["flops"] / PEAK_FLOPS
+        mem = r["bytes"] / HBM_BW
+        coll = (r.get("collectives") or {}).get("wire_bytes", 0.0) / ICI_BW
+        dom = max(("compute", comp), ("memory", mem),
+                  ("collective", coll), key=lambda kv: kv[1])
+        mf = model_flops_global(arch, shape)
+        useful = mf / max(r["flops"] * n, 1e-30)
+        step_time = max(comp, mem, coll)
+        mfu = (mf / n / max(step_time, 1e-30)) / PEAK_FLOPS
+        out.append({
+            "arch": arch, "shape": shape, "chips": n,
+            "compute_s": comp, "memory_s": mem, "collective_s": coll,
+            "bottleneck": dom[0], "dominant_s": dom[1],
+            "model_flops": mf, "useful_ratio": useful,
+            "roofline_frac": comp / max(step_time, 1e-30),
+            "mfu_bound": mfu,
+            "peak_mem_gb": (r.get("memory", {}).get("peak_bytes") or 0)
+            / 1e9,
+        })
+    return out
+
+
+def main():
+    rows = load()
+    table = build_table(rows, multi_pod=False)
+    print("arch,shape,compute_s,memory_s,collective_s,bottleneck,"
+          "useful_ratio,roofline_frac,peak_mem_gb")
+    for t in table:
+        print(f"{t['arch']},{t['shape']},{t['compute_s']:.4g},"
+              f"{t['memory_s']:.4g},{t['collective_s']:.4g},"
+              f"{t['bottleneck']},{t['useful_ratio']:.3f},"
+              f"{t['roofline_frac']:.3f},{t['peak_mem_gb']:.1f}")
+    return table
+
+
+if __name__ == "__main__":
+    main()

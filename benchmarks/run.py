@@ -1,0 +1,64 @@
+"""Benchmark harness — one entry per paper table/figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Emits ``name,key=value,...`` CSV lines:
+  vs_wse        — paper Fig. 3 (Virtual Screening weak scaling)
+  snp_wse       — paper Fig. 4 (SNP calling weak scaling)
+  ingestion     — paper Fig. 5 (storage-backend ingestion speedup)
+  reduce_depth  — paper §1.2.2 tree-depth K trade-off
+  kernel_micro  — Pallas kernel design points
+  roofline      — per (arch x shape) three-term table from the dry-run
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the slow multi-process WSE sweeps")
+    ap.add_argument("--skip", action="append", default=[])
+    args = ap.parse_args()
+
+    failures = []
+
+    def section(name, fn):
+        if any(s in name for s in args.skip):
+            return
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception as e:
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+
+    from benchmarks import ingestion, kernel_micro, reduce_depth, roofline
+
+    if not args.fast:
+        from benchmarks import wse
+        section("vs_wse (paper Fig. 3)", lambda: wse.main("vs"))
+        section("snp_wse (paper Fig. 4)", lambda: wse.main("snp"))
+    section("ingestion (paper Fig. 5)", ingestion.main)
+    section("reduce_depth (paper §1.2.2)", reduce_depth.main)
+    section("kernel_micro", kernel_micro.main)
+    if os.path.exists("reports/dryrun.jsonl"):
+        section("roofline (dry-run)", roofline.main)
+    else:
+        print("# roofline skipped: run `python -m repro.launch.dryrun` "
+              "first (reports/dryrun.jsonl missing)")
+    if failures:
+        print("FAILURES:", failures)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,56 @@
+"""WSE benchmarks for the paper's two applications (Figs. 3 and 4).
+
+WSE(N) = T(base workload, 1 worker) / T(N x workload, N workers); ideal 1.
+Reported on the structural (target-TPU) time model; measured wall time on
+this 1-core container is printed alongside with its caveat.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, List
+
+HERE = os.path.dirname(__file__)
+
+
+def run_cell(app: str, workers: int, records_per_worker: int = 2048
+             ) -> Dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(os.path.join(HERE, "..", "src"))
+    out = subprocess.run(
+        [sys.executable, os.path.join(HERE, "_wse_worker.py"),
+         "--app", app, "--workers", str(workers),
+         "--records-per-worker", str(records_per_worker)],
+        env=env, capture_output=True, text=True, timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(f"worker failed: {out.stderr[-2000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def wse_curve(app: str, worker_counts=(1, 2, 4, 8),
+              records_per_worker: int = 2048) -> List[Dict]:
+    rows = []
+    base = None
+    for n in worker_counts:
+        cell = run_cell(app, n, records_per_worker)
+        if base is None:
+            base = cell
+        cell["wse_model"] = base["model_s"] / max(cell["model_s"], 1e-12)
+        cell["wse_wall"] = base["wall_s"] / max(cell["wall_s"], 1e-12)
+        rows.append(cell)
+    return rows
+
+
+def main(app: str):
+    rows = wse_curve(app)
+    for r in rows:
+        print(f"{app}_wse,workers={r['workers']},"
+              f"model_s={r['model_s']:.4e},wse_model={r['wse_model']:.3f},"
+              f"wall_s={r['wall_s']:.2f},wse_wall={r['wse_wall']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "vs")

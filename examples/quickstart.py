@@ -1,0 +1,45 @@
+"""Quickstart: the paper's Listing 1 (GC count), line for line.
+
+  PYTHONPATH=src:. python examples/quickstart.py
+
+A DNA sequence is a record stream over {A,T,G,C} (int codes 0..3).  The
+`ubuntu` image's command grammar maps the paper's POSIX pipeline:
+  grep -o '[GC]' /dna | wc -l   ->  grep-count 2 3
+  awk '{s+=$1} END {print s}'   ->  awk-sum
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import MaRe, TextFile
+
+
+def main():
+    rng = np.random.default_rng(42)
+    genome = rng.integers(0, 4, size=100_000).astype(np.int32)  # A T G C
+
+    gc_count = (
+        MaRe((genome,)).map(
+            inputMountPoint=TextFile("/dna"),
+            outputMountPoint=TextFile("/count"),
+            image="ubuntu",
+            command="grep-count 2 3",
+        ).reduce(
+            inputMountPoint=TextFile("/counts"),
+            outputMountPoint=TextFile("/sum"),
+            image="ubuntu",
+            command="awk-sum",
+        ))
+
+    (total,) = gc_count.collect_first_shard()
+    expected = int(np.sum((genome == 2) | (genome == 3)))
+    print(f"GC count: {int(total[0])} (expected {expected})")
+    assert int(total[0]) == expected
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.checkpoint.elastic import (rescale, shardings_for_params)
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager", "rescale", "shardings_for_params"]

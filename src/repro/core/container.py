@@ -1,0 +1,157 @@
+"""ContainerOps: the TPU analogue of MaRe's Docker-image transformations.
+
+A Docker image in MaRe is a *named, versioned, self-contained tool* with
+declared input/output mount points.  Here a :class:`ContainerOp` is a named,
+versioned, self-contained **jittable transformation** over one partition,
+with the same declared mounts.  The registry plays the role of the Docker
+registry: ops are ``register``-ed under ``image:tag`` names and ``pull``-ed
+by the driver (DESIGN.md §2 — delivery contract retained, kernel-namespace
+isolation dropped: it has no TPU analogue).
+
+A partition is a :class:`Partition` — a fixed-capacity pytree of record
+arrays plus a dynamic valid-record count (SPMD requires static shapes, so
+partitions are padded; `count` tracks validity, mirroring how MaRe staged a
+variable number of records into a fixed tmpfs mount).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mounts import Mount
+
+
+class Partition(NamedTuple):
+    """One shard-local partition: padded records + valid count."""
+
+    records: Any        # pytree of arrays, leading dim = capacity
+    count: jax.Array    # int32 scalar, number of valid records
+
+    @property
+    def capacity(self) -> int:
+        leaves = jax.tree.leaves(self.records)
+        return int(leaves[0].shape[0]) if leaves else 0
+
+    def mask(self) -> jax.Array:
+        """Boolean [capacity] validity mask."""
+        return jnp.arange(self.capacity) < self.count
+
+
+def make_partition(records: Any, count: Optional[Any] = None) -> Partition:
+    leaves = jax.tree.leaves(records)
+    cap = leaves[0].shape[0] if leaves else 0
+    if count is None:
+        count = jnp.int32(cap)
+    return Partition(records=records, count=jnp.asarray(count, jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class ContainerOp:
+    """A named transformation over one partition.
+
+    ``fn(partition, **params) -> partition``.  ``image``/``tag`` give the
+    registry identity; ``command`` records the originating command string
+    (provenance — mirrors the paper's shell command field).  ``out_capacity``
+    declares the static record capacity of the output partition (needed for
+    SPMD shape inference; reducers must shrink, per the paper's requirement
+    that reduce commands "always reduce the size of the partition").
+    ``associative_commutative`` marks combiners that are safe for the
+    K-level reduce tree (paper §1.2.2).
+    """
+
+    image: str
+    fn: Callable[..., Partition]
+    input_mount: Optional[Mount] = None
+    output_mount: Optional[Mount] = None
+    command: str = ""
+    tag: str = "latest"
+    out_capacity: Optional[int] = None
+    associative_commutative: bool = False
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def name(self) -> str:
+        return f"{self.image}:{self.tag}"
+
+    def __call__(self, part: Partition) -> Partition:
+        out = self.fn(part, **self.params)
+        if not isinstance(out, Partition):
+            raise TypeError(
+                f"container {self.name} must return a Partition, got "
+                f"{type(out).__name__}")
+        return out
+
+    def with_mounts(self, input_mount: Mount, output_mount: Mount,
+                    command: str = "") -> "ContainerOp":
+        return dataclasses.replace(
+            self, input_mount=input_mount, output_mount=output_mount,
+            command=command or self.command)
+
+
+class Registry:
+    """Name -> ContainerOp factory (the "Docker registry")."""
+
+    def __init__(self) -> None:
+        self._images: Dict[str, Callable[..., ContainerOp]] = {}
+
+    def register(self, image: str, tag: str = "latest"
+                 ) -> Callable[[Callable[..., ContainerOp]],
+                               Callable[..., ContainerOp]]:
+        key = f"{image}:{tag}"
+
+        def deco(factory: Callable[..., ContainerOp]):
+            if key in self._images:
+                raise ValueError(f"image {key} already registered")
+            self._images[key] = factory
+            return factory
+
+        return deco
+
+    def pull(self, image: str, **build_args: Any) -> ContainerOp:
+        key = image if ":" in image else f"{image}:latest"
+        if key not in self._images:
+            raise KeyError(
+                f"image {key!r} not found in registry; available: "
+                f"{sorted(self._images)}")
+        return self._images[key](**build_args)
+
+    def images(self):
+        return sorted(self._images)
+
+
+#: Global default registry (like the Docker Hub default).
+DEFAULT_REGISTRY = Registry()
+register = DEFAULT_REGISTRY.register
+pull = DEFAULT_REGISTRY.pull
+
+
+def container_op(image: str, *, tag: str = "latest",
+                 out_capacity: Optional[int] = None,
+                 associative_commutative: bool = False,
+                 registry: Registry = DEFAULT_REGISTRY,
+                 **default_params: Any):
+    """Decorator: register ``fn(partition, **params) -> Partition``.
+
+    The decorated function becomes an image factory: ``pull(image,
+    **params)`` binds params and returns a :class:`ContainerOp`.
+    """
+
+    def deco(fn: Callable[..., Partition]) -> Callable[..., ContainerOp]:
+        def factory(**params: Any) -> ContainerOp:
+            merged = dict(default_params)
+            merged.update(params)
+            return ContainerOp(
+                image=image, tag=tag, fn=fn,
+                out_capacity=merged.pop("out_capacity", out_capacity),
+                associative_commutative=associative_commutative,
+                params=merged)
+
+        registry.register(image, tag)(factory)
+        factory.__name__ = fn.__name__
+        factory.op = factory  # convenience alias
+        return factory
+
+    return deco

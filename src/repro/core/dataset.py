@@ -1,0 +1,94 @@
+"""ShardedDataset: the RDD analogue — a partitioned dataset on a mesh axis.
+
+A dataset is a pytree of *global* arrays whose leading dimension is the
+total record capacity, sharded over one mesh axis (`NamedSharding`), plus a
+per-shard valid-record count.  Shards play the role of RDD partitions;
+`from_host` plays the role of `sc.parallelize`, `collect` of `RDD.collect`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ShardedDataset:
+    records: Any          # pytree of global arrays; leading dim = n * cap
+    counts: jax.Array     # [n_shards] int32, valid records per shard
+    mesh: Mesh
+    axis: str = "data"
+
+    @property
+    def num_shards(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    @property
+    def capacity(self) -> int:
+        """Per-shard record capacity."""
+        lead = jax.tree.leaves(self.records)[0].shape[0]
+        return lead // self.num_shards
+
+    def record_spec(self) -> Any:
+        return jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), self.records)
+
+    def sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P(self.axis))
+
+    def with_records(self, records: Any, counts: Optional[jax.Array] = None
+                     ) -> "ShardedDataset":
+        return dataclasses.replace(
+            self, records=records,
+            counts=self.counts if counts is None else counts)
+
+
+def from_host(records: Any, mesh: Mesh, axis: str = "data",
+              capacity: Optional[int] = None) -> ShardedDataset:
+    """Distribute host records round-robin-block over the ``axis`` shards,
+    padding each shard to a common capacity (static SPMD shapes)."""
+    n = int(mesh.shape[axis])
+    leaves = jax.tree.leaves(records)
+    total = leaves[0].shape[0]
+    cap = capacity or math.ceil(total / n)
+    counts = np.full((n,), cap, np.int32)
+    rem = n * cap - total
+    for i in range(rem):
+        counts[n - 1 - (i % n)] -= 1
+    # Block layout: shard s holds records [sum(counts[:s]), +counts[s]) of
+    # the input, padded to cap.
+    offsets = np.concatenate([[0], np.cumsum(counts)])
+
+    def place(leaf):
+        leaf = np.asarray(leaf)
+        out = np.zeros((n * cap,) + leaf.shape[1:], leaf.dtype)
+        for s in range(n):
+            c = counts[s]
+            out[s * cap:s * cap + c] = leaf[offsets[s]:offsets[s] + c]
+        return jax.device_put(out, NamedSharding(mesh, P(axis)))
+
+    placed = jax.tree.map(place, records)
+    counts_dev = jax.device_put(
+        jnp.asarray(counts), NamedSharding(mesh, P(axis)))
+    return ShardedDataset(records=placed, counts=counts_dev, mesh=mesh,
+                          axis=axis)
+
+
+def collect(ds: ShardedDataset) -> Any:
+    """Gather valid records to host (RDD.collect)."""
+    counts = np.asarray(jax.device_get(ds.counts))
+    cap = ds.capacity
+
+    def gather(leaf):
+        host = np.asarray(jax.device_get(leaf))
+        segs: List[np.ndarray] = []
+        for s in range(ds.num_shards):
+            segs.append(host[s * cap:s * cap + counts[s]])
+        return np.concatenate(segs, axis=0) if segs else host[:0]
+
+    return jax.tree.map(gather, ds.records)

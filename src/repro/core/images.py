@@ -1,0 +1,118 @@
+"""Standard container images (the "Docker Hub" of this repo).
+
+Each image is a registered ContainerOp factory whose ``command`` string is
+interpreted by the image itself — the ENTRYPOINT analogue.  The ``posix``
+image implements a micro-grammar covering the paper's Listing 1 commands
+(grep-count / awk-sum), plus generic combiners used by the evaluation
+pipelines (top-k filtering = sdsorter, concat = vcf-concat).
+"""
+from __future__ import annotations
+
+import shlex
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.container import (ContainerOp, Partition, container_op,
+                                  make_partition)
+
+
+# ---------------------------------------------------------------------------
+# posix: grep-count / awk-sum over integer token records (Listing 1)
+# ---------------------------------------------------------------------------
+
+def _posix_fn(part: Partition, command: str = "", **kw: Any) -> Partition:
+    argv = shlex.split(command)
+    if not argv:
+        raise ValueError("posix image requires a command")
+    prog = argv[0]
+    if prog == "grep-count":
+        # grep -o '<chars>' | wc -l : count records whose value is in a set.
+        # Records are int32 token codes; command: grep-count 2 3  (codes)
+        codes = jnp.asarray([int(a) for a in argv[1:]], jnp.int32)
+        (tokens,) = jax.tree.leaves(part.records)
+        valid = part.mask()
+        hit = jnp.isin(tokens, codes) & valid
+        total = jnp.sum(hit).astype(jnp.int32)
+        return make_partition((total[None],), jnp.int32(1))
+    if prog == "awk-sum":
+        # awk '{s+=$1} END {print s}' : sum records to a single record.
+        (vals,) = jax.tree.leaves(part.records)
+        valid = part.mask()
+        s = jnp.sum(jnp.where(valid, vals, 0), axis=0)
+        return make_partition((s[None],), jnp.int32(1))
+    raise ValueError(f"posix image: unknown command {prog!r}")
+
+
+@container_op("ubuntu", associative_commutative=True)
+def posix_ubuntu(part: Partition, command: str = "", **kw: Any) -> Partition:
+    """The paper's `ubuntu` image: POSIX text tools micro-grammar."""
+    return _posix_fn(part, command=command, **kw)
+
+
+@container_op("posix", associative_commutative=True)
+def posix(part: Partition, command: str = "", **kw: Any) -> Partition:
+    return _posix_fn(part, command=command, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Generic combinators (used by evaluation pipelines and tests)
+# ---------------------------------------------------------------------------
+
+def fn_image(name: str, fn: Callable[..., Partition], *,
+             associative_commutative: bool = False,
+             registry=None, **defaults: Any) -> Callable[..., ContainerOp]:
+    """Build + register an image from a python function at runtime
+    (the `docker build` analogue for ad-hoc tools)."""
+    from repro.core import container as c
+    reg = registry or c.DEFAULT_REGISTRY
+
+    @container_op(name, associative_commutative=associative_commutative,
+                  registry=reg, **defaults)
+    def _op(part: Partition, command: str = "", **kw: Any) -> Partition:
+        return fn(part, **kw)
+
+    return _op
+
+
+@container_op("toolbox/topk", associative_commutative=True)
+def topk_image(part: Partition, command: str = "", k: int = 30,
+               score_field: int = 0, **kw: Any) -> Partition:
+    """sdsorter analogue: keep the k best-scoring records.
+
+    Records: tuple whose first leaf is [cap, ...]; scores are taken from
+    ``records[score_field]`` (a [cap] float array).  Associative +
+    commutative (paper notes sdsorter top-k is reduce-safe).
+    """
+    leaves = jax.tree.leaves(part.records)
+    scores = leaves[score_field]
+    if scores.ndim > 1:
+        scores = scores.reshape(scores.shape[0], -1)[:, 0]
+    valid = part.mask()
+    neg_inf = jnp.asarray(-jnp.inf, scores.dtype)
+    masked = jnp.where(valid, scores, neg_inf)
+    k_eff = min(k, part.capacity)
+    _, idx = jax.lax.top_k(masked, k_eff)
+    out = jax.tree.map(lambda l: jnp.take(l, idx, axis=0), part.records)
+    cnt = jnp.minimum(part.count, k_eff).astype(jnp.int32)
+    return make_partition(out, cnt)
+
+
+@container_op("toolbox/concat", associative_commutative=True)
+def concat_image(part: Partition, command: str = "", **kw: Any) -> Partition:
+    """vcf-concat analogue: identity on records (concatenation is implicit
+    in the tree gather); compacts valid records to the front."""
+    return part
+
+
+@container_op("toolbox/sum", associative_commutative=True)
+def sum_image(part: Partition, command: str = "", **kw: Any) -> Partition:
+    """Elementwise sum of records into a single record."""
+    valid = part.mask()
+
+    def s(leaf):
+        m = valid.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.sum(jnp.where(m, leaf, 0), axis=0)[None]
+
+    return make_partition(jax.tree.map(s, part.records), jnp.int32(1))

@@ -1,0 +1,203 @@
+"""MaRe: the user-facing driver API (paper Listings 1-3, JAX edition).
+
+.. code-block:: python
+
+    result = (MaRe(dataset)
+        .map(input_mount=TextFile("/dna"), output_mount=TextFile("/count"),
+             image="posix", command="grep -c [GC]")
+        .reduce(input_mount=TextFile("/counts"),
+                output_mount=TextFile("/sum"),
+                image="posix", command="awk-sum")
+        .collect())
+
+Semantics match the paper: ``map`` applies a container to each partition
+(single stage, no shuffle); ``reduce`` aggregates all partitions down to one
+via a depth-K tree (K shuffles, combiner must be associative+commutative;
+default K=2); ``repartition_by`` co-locates records by key (hash shuffle).
+Ops are pulled from the registry by image name; a ``command`` string is
+passed to the image factory (images interpret their own command grammar,
+like a container ENTRYPOINT).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import dataset as ds_lib
+from repro.core.container import (ContainerOp, Partition, Registry,
+                                  DEFAULT_REGISTRY, make_partition)
+from repro.core.dataset import ShardedDataset
+from repro.core.mounts import Mount
+from repro.core.plan import Plan, execute_map_stage, _apply_chain
+from repro.core.shuffle import shuffle_partition
+from repro.core.tree_reduce import tree_reduce_partition
+
+
+def _resolve_op(image: Optional[str], op: Optional[ContainerOp],
+                command: str, registry: Registry,
+                input_mount: Optional[Mount],
+                output_mount: Optional[Mount], **params: Any) -> ContainerOp:
+    if op is None:
+        if image is None:
+            raise ValueError("either `image` or `op` must be given")
+        op = registry.pull(image, command=command, **params)
+    if input_mount is not None or output_mount is not None:
+        op = op.with_mounts(input_mount, output_mount, command)
+    return op
+
+
+class MaRe:
+    """Driver handle over a :class:`ShardedDataset` with a lazy map plan."""
+
+    def __init__(self, data: Any, mesh: Optional[Mesh] = None,
+                 axis: str = "data",
+                 registry: Registry = DEFAULT_REGISTRY,
+                 _plan: Optional[Plan] = None):
+        if isinstance(data, ShardedDataset):
+            self.dataset = data
+        else:
+            if mesh is None:
+                mesh = jax.make_mesh(
+                    (jax.device_count(),), (axis,),
+                    axis_types=(jax.sharding.AxisType.Auto,))
+            self.dataset = ds_lib.from_host(data, mesh, axis)
+        self.registry = registry
+        self.plan = _plan or Plan()
+
+    # -- primitives ---------------------------------------------------------
+
+    def map(self, *, image: Optional[str] = None,
+            op: Optional[ContainerOp] = None,
+            command: str = "",
+            inputMountPoint: Optional[Mount] = None,
+            outputMountPoint: Optional[Mount] = None,
+            input_mount: Optional[Mount] = None,
+            output_mount: Optional[Mount] = None,
+            **params: Any) -> "MaRe":
+        """Apply a container to each partition (lazy; fused into one stage).
+
+        Accepts both paper spelling (``inputMountPoint``) and snake_case.
+        """
+        op = _resolve_op(image, op, command, self.registry,
+                         input_mount or inputMountPoint,
+                         output_mount or outputMountPoint, **params)
+        out = MaRe(self.dataset, registry=self.registry,
+                   _plan=self.plan.then(op))
+        return out
+
+    def reduce(self, *, image: Optional[str] = None,
+               op: Optional[ContainerOp] = None,
+               command: str = "",
+               inputMountPoint: Optional[Mount] = None,
+               outputMountPoint: Optional[Mount] = None,
+               input_mount: Optional[Mount] = None,
+               output_mount: Optional[Mount] = None,
+               depth: int = 2,
+               **params: Any) -> "MaRe":
+        """K-level tree aggregation of all partitions to one (paper K=2).
+
+        Runs the pending map chain and the reduce tree in a single
+        ``shard_map`` computation; the result is replicated on every shard
+        (single-partition RDD')."""
+        op = _resolve_op(image, op, command, self.registry,
+                         input_mount or inputMountPoint,
+                         output_mount or outputMountPoint, **params)
+        if not op.associative_commutative:
+            raise ValueError(
+                f"reduce combiner {op.name} is not marked associative+"
+                "commutative (paper: required for tree-reduce consistency)")
+        ds = self.dataset
+        mesh, axis = ds.mesh, ds.axis
+        axis_size = ds.num_shards
+        map_ops = self.plan.ops
+
+        def stage(records, counts):
+            part = _apply_chain(map_ops, records, counts[0])
+            part = tree_reduce_partition(
+                part, op, axis_name=axis, axis_size=axis_size, depth=depth)
+            return part.records, part.count[None]
+
+        fn = jax.jit(jax.shard_map(
+            stage, mesh=mesh, in_specs=(P(axis), P(axis)),
+            out_specs=(P(axis), P(axis))))
+        out_records, out_counts = fn(ds.records, ds.counts)
+        # Result is replicated; present it as a 1-logical-partition dataset.
+        reduced = ShardedDataset(records=out_records, counts=out_counts,
+                                 mesh=mesh, axis=axis)
+        return MaRe(reduced, registry=self.registry)
+
+    def repartition_by(self, key_by: Callable[[Any], jax.Array],
+                       capacity: Optional[int] = None,
+                       num_partitions: Optional[int] = None) -> "MaRe":
+        """Hash-shuffle records so equal keys share a partition.
+
+        ``key_by(records) -> int array [capacity]`` (vectorized keyBy over
+        the record pytree).  ``num_partitions`` other than the axis size is
+        emulated by keying into ``num_partitions`` buckets spread over the
+        axis (paper sets it to #workers, which is the axis size here).
+        """
+        ds = self.dataset
+        mesh, axis = ds.mesh, ds.axis
+        axis_size = ds.num_shards
+        map_ops = self.plan.ops
+
+        def stage(records, counts):
+            part = _apply_chain(map_ops, records, counts[0])
+            keys = key_by(part.records)
+            if num_partitions is not None and num_partitions != axis_size:
+                keys = keys % num_partitions
+            res = shuffle_partition(part, keys, axis_name=axis,
+                                    axis_size=axis_size, capacity=capacity)
+            return (res.part.records, res.part.count[None],
+                    res.dropped[None])
+
+        fn = jax.jit(jax.shard_map(
+            stage, mesh=mesh, in_specs=(P(axis), P(axis)),
+            out_specs=(P(axis), P(axis), P(axis))))
+        out_records, out_counts, dropped = fn(ds.records, ds.counts)
+        total_dropped = int(jax.device_get(dropped).sum())
+        if total_dropped:
+            raise RuntimeError(
+                f"repartition_by overflow: {total_dropped} records dropped; "
+                "raise `capacity` (paper analogue: partition exceeded tmpfs "
+                "capacity — fall back to a larger staging area)")
+        out = ShardedDataset(records=out_records, counts=out_counts,
+                             mesh=mesh, axis=axis)
+        return MaRe(out, registry=self.registry)
+
+    # Paper spelling alias
+    repartitionBy = repartition_by
+
+    # -- actions ------------------------------------------------------------
+
+    def cache(self) -> "MaRe":
+        """Materialize the pending map chain (RDD.cache analogue)."""
+        return MaRe(execute_map_stage(self.dataset, self.plan),
+                    registry=self.registry)
+
+    def collect(self) -> Any:
+        """Run pending stages and gather valid records to host."""
+        ds = execute_map_stage(self.dataset, self.plan)
+        out = ds_lib.collect(ds)
+        return out
+
+    def collect_first_shard(self) -> Any:
+        """For reduced (replicated) results: shard 0's valid records."""
+        ds = execute_map_stage(self.dataset, self.plan)
+        counts = jax.device_get(ds.counts)
+        cap = ds.capacity
+        def first(leaf):
+            host = jax.device_get(leaf)
+            return host[:int(counts[0])]
+        return jax.tree.map(first, ds.records)
+
+    def num_partitions(self) -> int:
+        return self.dataset.num_shards
+
+    def describe(self) -> str:
+        return (f"MaRe(shards={self.dataset.num_shards}, "
+                f"cap={self.dataset.capacity}, stage=[{self.plan.describe()}])")

@@ -1,0 +1,75 @@
+"""Lazy execution plan — the Spark-DAG/stage analogue.
+
+MaRe inherits Spark's lazy evaluation: chained ``map`` calls generate a
+single stage (one ``mapPartitions`` chain, no shuffle); ``reduce`` and
+``repartitionBy`` are stage boundaries.  Here a :class:`Plan` accumulates
+ContainerOps; :func:`execute_map_stage` fuses the pending map chain into a
+single ``shard_map`` + ``jit`` computation — one XLA module, zero
+collectives, locality preserved by construction (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.container import ContainerOp, Partition, make_partition
+from repro.core.dataset import ShardedDataset
+
+
+@dataclasses.dataclass
+class Plan:
+    """A pending chain of fused map ops (one stage)."""
+
+    ops: Tuple[ContainerOp, ...] = ()
+
+    def then(self, op: ContainerOp) -> "Plan":
+        return Plan(ops=self.ops + (op,))
+
+    @property
+    def empty(self) -> bool:
+        return not self.ops
+
+    def describe(self) -> str:
+        return " | ".join(op.name for op in self.ops) or "<identity>"
+
+
+def _apply_chain(ops: Tuple[ContainerOp, ...], records: Any,
+                 count: jax.Array) -> Partition:
+    part = make_partition(records, count)
+    for op in ops:
+        if op.input_mount is not None:
+            op.input_mount.validate(part.records)
+        part = op(part)
+        if op.output_mount is not None:
+            op.output_mount.validate(part.records)
+    return part
+
+
+def execute_map_stage(ds: ShardedDataset, plan: Plan) -> ShardedDataset:
+    """Fuse and run the pending map chain as one shard_map stage."""
+    if plan.empty:
+        return ds
+    mesh, axis = ds.mesh, ds.axis
+
+    def stage(records, counts):
+        part = _apply_chain(plan.ops, records, counts[0])
+        return part.records, part.count[None]
+
+    fn = jax.jit(jax.shard_map(
+        stage, mesh=mesh, in_specs=(P(axis), P(axis)),
+        out_specs=(P(axis), P(axis))))
+    out_records, out_counts = fn(ds.records, ds.counts)
+    return ds.with_records(out_records, out_counts)
+
+
+def stage_fn_for_specs(plan: Plan):
+    """Return the raw shard-interior function (for dry-run lowering)."""
+    def stage(records, counts):
+        part = _apply_chain(plan.ops, records, counts[0])
+        return part.records, part.count[None]
+    return stage

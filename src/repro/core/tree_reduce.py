@@ -1,0 +1,263 @@
+"""K-level tree reduction over mesh axes — MaRe's ``reduce`` primitive.
+
+Paper semantics (§1.2.2, Fig. 2): given a user depth K (default 2), records
+are aggregated level by level: within-partition combine (mapPartitions),
+then ``repartition`` to fewer partitions — K shuffles total — until a single
+partition remains.  The combiner must be associative + commutative.
+
+TPU mapping: partitions are shards along a mesh axis of size ``n``.  The
+axis size is factored into K near-equal group sizes ``[g_1..g_K]``; at level
+``i`` every group of ``g_i`` shards ships its partition to the group leader
+with ``g_i - 1`` strided ``ppermute`` sends (the explicit "shuffle"), and the
+leader runs the combiner over the concatenated records.  After K levels the
+result lives on shard 0 and is tree-broadcast back (log-doubling) so the
+returned array is replicated — the analogue of the paper's single-partition
+RDD'.
+
+This schedule is intentionally *paper-faithful*: it materializes each level
+like Spark's repartition does.  The beyond-paper fused path (psum /
+reduce-scatter+all-gather, overlap-friendly) lives in
+:func:`fused_allreduce` and is compared against the tree in
+EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.container import Partition, make_partition
+
+
+def split_factors(n: int, depth: int) -> List[int]:
+    """Factor ``n`` into ``depth`` integer factors, each as near n^(1/K) as
+    possible (paper: "the records in the RDD are aggregated using a
+    tree-like algorithm ... K levels").  Excess depth yields trailing 1s.
+    """
+    if n <= 0:
+        raise ValueError(f"axis size must be positive, got {n}")
+    if depth < 1:
+        raise ValueError(f"depth must be >= 1, got {depth}")
+    factors: List[int] = []
+    remaining = n
+    for level in range(depth, 0, -1):
+        if remaining == 1:
+            factors.append(1)
+            continue
+        target = round(remaining ** (1.0 / level))
+        target = max(2, target)
+        # find a divisor of `remaining` closest to target
+        divs = [d for d in range(1, remaining + 1) if remaining % d == 0]
+        g = min((d for d in divs if d > 1),
+                key=lambda d: (abs(d - target), d)) if remaining > 1 else 1
+        factors.append(g)
+        remaining //= g
+    if remaining != 1:
+        factors[-1] *= remaining
+    assert _prod(factors) == n, (factors, n)
+    return factors
+
+
+def _prod(xs: Sequence[int]) -> int:
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+def _level_pairs(axis_size: int, stride: int, group: int, j: int):
+    """ppermute pairs sending member ``j`` of each group to its leader."""
+    leaders = range(0, axis_size, stride * group)
+    return [(l + j * stride, l) for l in leaders if l + j * stride < axis_size]
+
+
+def broadcast_from_zero(x: Any, axis_name: str, axis_size: int) -> Any:
+    """Replicate shard 0's value to all shards via log-doubling ppermute."""
+    k = 1
+    while k < axis_size:
+        pairs = [(s, s + k) for s in range(min(k, axis_size - k))]
+
+        def send(leaf):
+            return jax.lax.ppermute(leaf, axis_name, pairs)
+
+        received = jax.tree.map(send, x)
+        idx = jax.lax.axis_index(axis_name)
+        in_wave = (idx >= k) & (idx < 2 * k)
+
+        def sel(r, cur):
+            return jnp.where(in_wave, r, cur)
+
+        x = jax.tree.map(sel, received, x)
+        k *= 2
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Record-level tree reduce (the MaRe.reduce primitive, shard_map interior)
+# ---------------------------------------------------------------------------
+
+def _fit_capacity(part: Partition, out_cap: int) -> Partition:
+    """Pad or truncate a (front-compacted) partition to a fixed capacity."""
+    cap = part.capacity
+    if cap == out_cap:
+        return part
+    if cap < out_cap:
+        rec = jax.tree.map(
+            lambda l: jnp.concatenate(
+                [l, jnp.zeros((out_cap - cap,) + l.shape[1:], l.dtype)],
+                axis=0), part.records)
+    else:
+        rec = jax.tree.map(lambda l: l[:out_cap], part.records)
+    return Partition(records=rec,
+                     count=jnp.minimum(part.count, out_cap))
+
+
+def tree_reduce_partition(
+    part: Partition,
+    combine: Callable[[Partition], Partition],
+    axis_name: str,
+    axis_size: int,
+    depth: int = 2,
+    broadcast_result: bool = True,
+    out_capacity: Optional[int] = None,
+) -> Partition:
+    """Run MaRe's K-level reduce over partitions sharded on ``axis_name``.
+
+    ``combine`` maps a partition of up-to ``g * out_cap`` records to one of
+    ``out_cap`` records (it must be mask-aware: ignore records beyond
+    ``count``).  Must be associative + commutative (paper requirement).
+
+    ``out_capacity`` fixes the per-level record capacity.  Size-reducing
+    combiners (sum, top-k) infer it from the local pre-combine; identity /
+    concatenating combiners (the paper's vcf-concat) need
+    ``out_capacity = axis_size * input_capacity`` so the single surviving
+    partition can hold every record — MaRe.reduce infers this.
+    """
+    factors = split_factors(axis_size, depth)
+    in_cap = part.capacity
+    # Level 0: local pre-combine (paper: mapPartitions before first shuffle).
+    part = combine(part)
+    if out_capacity is None and part.capacity >= in_cap:
+        out_capacity = axis_size * in_cap        # concat-like combiner
+    out_cap = out_capacity or part.capacity
+    part = _fit_capacity(part, out_cap)
+    stride = 1
+    for g in factors:
+        if g == 1:
+            stride *= g
+            continue
+        rec_parts = [part.records]
+        counts = [part.count]
+        for j in range(1, g):
+            pairs = _level_pairs(axis_size, stride, g, j)
+            rec_parts.append(jax.tree.map(
+                lambda leaf: jax.lax.ppermute(leaf, axis_name, pairs),
+                part.records))
+            counts.append(jax.lax.ppermute(part.count, axis_name, pairs))
+        gathered = jax.tree.map(
+            lambda *leaves: jnp.concatenate(leaves, axis=0), *rec_parts)
+        # Non-leaders received zeros; their counts are zero so the combiner's
+        # mask discards the garbage.  Re-stack counts into a validity layout:
+        # records of member j occupy [j*out_cap, j*out_cap + count_j).
+        total = jnp.zeros((), jnp.int32)
+        mask = jnp.zeros((g * out_cap,), bool)
+        pos = jnp.arange(out_cap)
+        for j, c in enumerate(counts):
+            seg = (pos < c)
+            mask = mask.at[j * out_cap:(j + 1) * out_cap].set(seg)
+            total = total + c
+        # Compact valid records to the front so `count` semantics hold.
+        order = jnp.argsort(~mask, stable=True)
+        gathered = jax.tree.map(lambda leaf: jnp.take(leaf, order, axis=0, mode="clip"),
+                                gathered)
+        combined = _fit_capacity(combine(make_partition(gathered, total)),
+                                 out_cap)
+        idx = jax.lax.axis_index(axis_name)
+        is_leader = (idx % (stride * g)) == 0
+
+        def sel(new, old):
+            # scalar predicate broadcasts over any record shape
+            return jnp.where(is_leader, new, old)
+
+        part = Partition(
+            records=jax.tree.map(sel, combined.records, part.records),
+            count=jnp.where(is_leader, combined.count, part.count))
+        stride *= g
+    if broadcast_result:
+        part = Partition(
+            records=broadcast_from_zero(part.records, axis_name, axis_size),
+            count=broadcast_from_zero(part.count, axis_name, axis_size))
+    return part
+
+
+# ---------------------------------------------------------------------------
+# Dense-gradient tree all-reduce (the trainer's paper-faithful grad sync)
+# ---------------------------------------------------------------------------
+
+def tree_allreduce(
+    x: Any,
+    axis_name: str,
+    axis_size: int,
+    depth: int = 2,
+    factors: Optional[Sequence[int]] = None,
+) -> Any:
+    """Paper-faithful K-level tree all-reduce of a pytree of arrays.
+
+    Each level ships whole partials to group leaders (g-1 strided ppermute
+    sends) and sums; the total is tree-broadcast from shard 0.  Used as the
+    MaRe-style gradient synchronizer (grad_sync="mare_tree").
+    """
+    if axis_size == 1:
+        return x
+    factors = list(factors) if factors is not None else split_factors(
+        axis_size, depth)
+    stride = 1
+    for g in factors:
+        if g == 1:
+            stride *= g
+            continue
+        acc = x
+        for j in range(1, g):
+            pairs = _level_pairs(axis_size, stride, g, j)
+            recv = jax.tree.map(
+                lambda leaf: jax.lax.ppermute(leaf, axis_name, pairs), x)
+            acc = jax.tree.map(jnp.add, acc, recv)
+        x = acc  # valid at leaders; non-leaders carry garbage but never send
+        stride *= g
+    return broadcast_from_zero(x, axis_name, axis_size)
+
+
+def fused_allreduce(x: Any, axis_name: str) -> Any:
+    """Beyond-paper path: let XLA emit a fused (ring/tree) all-reduce."""
+    return jax.tree.map(partial(jax.lax.psum, axis_name=axis_name), x)
+
+
+def hierarchical_allreduce(x: Any, inner_axis: str, outer_axis: str) -> Any:
+    """Two-level tree across mesh axes: intra-pod then inter-pod psum.
+
+    This is the paper's K=2 tree expressed at mesh granularity — the natural
+    schedule on a (pod, data, ...) mesh: reduce over fast ICI first, then
+    over the slower pod interconnect (DESIGN.md §3.1).
+    """
+    x = jax.tree.map(partial(jax.lax.psum, axis_name=inner_axis), x)
+    return jax.tree.map(partial(jax.lax.psum, axis_name=outer_axis), x)
+
+
+def collective_bytes_tree(nbytes: int, axis_size: int, depth: int = 2) -> int:
+    """Napkin-math helper: bytes moved per shard-link by the K-level tree
+    (used by benchmarks/reduce_depth.py and EXPERIMENTS §Perf)."""
+    factors = split_factors(axis_size, depth)
+    total = 0
+    shards = axis_size
+    for g in factors:
+        senders = shards - shards // g
+        total += senders * nbytes
+        shards //= g
+    # log-doubling broadcast
+    k = 1
+    while k < axis_size:
+        total += min(k, axis_size - k) * nbytes
+        k *= 2
+    return total

@@ -1,0 +1,46 @@
+"""Shared kernel utilities: interpret-mode policy and block helpers.
+
+This container is CPU-only; TPU v5e is the compile target.  Kernels are
+written with explicit BlockSpec VMEM tiling for the MXU/VPU and validated
+under ``interpret=True`` (Python execution of the kernel body) against the
+pure-jnp oracles in each kernel's ``ref.py``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+
+# v5e hardware model used for block-size reasoning (see DESIGN.md).
+VMEM_BYTES = 128 * 1024 * 1024        # ~128 MiB VMEM per core (v5e: 128MB)
+MXU_DIM = 128                          # systolic array tile
+VPU_LANES = 128
+SUBLANE = 8
+
+
+def use_interpret() -> bool:
+    """Pallas interpret mode: on unless running on a real TPU backend or
+    explicitly overridden via REPRO_PALLAS_INTERPRET=0/1."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pick_block(n: int, preferred: int, align: int = MXU_DIM) -> int:
+    """Largest MXU-aligned block <= preferred that does not over-pad n."""
+    if n <= align:
+        return round_up(max(n, 1), SUBLANE)
+    b = min(preferred, round_up(n, align))
+    while b > align and round_up(n, b) - n >= b // 2:
+        b //= 2
+    return max(align, b)
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b

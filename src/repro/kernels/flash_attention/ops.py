@@ -1,0 +1,46 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Handles the [B, H, S, D] <-> [B*H, S, D] flattening, GQA group math,
+interpret-mode policy, and the XLA fallback used by the 512-device dry-run
+(Pallas does not lower on the CPU host platform; on real TPU the kernel
+path is selected automatically).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "sm_scale", "block_q", "block_k",
+                     "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True,
+                    window: Optional[int] = None,
+                    sm_scale: Optional[float] = None,
+                    block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q: [B, Hq, S, D]; k, v: [B, Hkv, S, D] -> [B, Hq, S, D]."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    interp = use_interpret() if interpret is None else interpret
+    out = flash_attention_kernel(
+        q.reshape(b * hq, sq, d),
+        k.reshape(b * hkv, sk, d),
+        v.reshape(b * hkv, sk, d),
+        group=group, causal=causal, window=window, sm_scale=sm_scale,
+        block_q=block_q, block_k=block_k, interpret=interp)
+    return out.reshape(b, hq, sq, d)
+
+
+__all__ = ["flash_attention", "attention_ref"]

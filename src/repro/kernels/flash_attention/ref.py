@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for flash attention (GQA + optional causal/window)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True,
+                  sm_scale: Optional[float] = None,
+                  window: Optional[int] = None) -> jnp.ndarray:
+    """Reference attention.
+
+    q: [B, Hq, Sq, D]; k, v: [B, Hkv, Sk, D]; Hq % Hkv == 0 (GQA groups).
+    ``window``: optional sliding-window size (attend to keys in
+    (qpos - window, qpos]); implies causal.
+    Returns [B, Hq, Sq, D] in q's dtype; softmax in f32.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)  # right-aligned positions
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal or window is not None:
+        mask = mask & (qpos >= kpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32)
+                      ).astype(q.dtype)

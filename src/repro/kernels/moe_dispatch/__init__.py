@@ -1,0 +1,1 @@
+from repro.kernels.moe_dispatch.ops import *  # noqa

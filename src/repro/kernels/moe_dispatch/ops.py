@@ -1,0 +1,26 @@
+"""jit'd wrapper for MoE dispatch slotting."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.moe_dispatch.kernel import moe_dispatch_kernel
+from repro.kernels.moe_dispatch.ref import dispatch_ref
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "block",
+                                             "interpret"))
+def moe_dispatch(assignments: jnp.ndarray, num_groups: int,
+                 block: int = 256,
+                 interpret: Optional[bool] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    interp = use_interpret() if interpret is None else interpret
+    return tuple(moe_dispatch_kernel(assignments, num_groups, block=block,
+                                     interpret=interp))
+
+
+__all__ = ["moe_dispatch", "dispatch_ref"]

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for MoE dispatch slotting (repartitionBy pack step)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def dispatch_ref(assignments: jnp.ndarray, num_groups: int
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """assignments: [n] int group ids in [0, num_groups).
+
+    Returns (positions [n], counts [num_groups]) where positions[i] is the
+    arrival rank of token i within its group (stable order) and counts[g]
+    the group size — exactly the slot layout MaRe's repartitionBy packs
+    into its [group, capacity] send buffer.
+    """
+    onehot = (assignments[:, None] ==
+              jnp.arange(num_groups)[None, :]).astype(jnp.int32)
+    within = jnp.cumsum(onehot, axis=0) - onehot       # ranks before i
+    positions = jnp.sum(within * onehot, axis=1)
+    counts = jnp.sum(onehot, axis=0)
+    return positions, counts

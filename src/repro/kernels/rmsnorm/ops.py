@@ -1,0 +1,28 @@
+"""jit'd wrapper for fused RMSNorm; arbitrary leading dims."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.rmsnorm.kernel import rmsnorm_kernel
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6,
+            block_rows: int = 256,
+            interpret: Optional[bool] = None) -> jnp.ndarray:
+    shape = x.shape
+    d = shape[-1]
+    interp = use_interpret() if interpret is None else interpret
+    out = rmsnorm_kernel(x.reshape(-1, d), weight, eps=eps,
+                         block_rows=block_rows, interpret=interp)
+    return out.reshape(shape)
+
+
+__all__ = ["rmsnorm", "rmsnorm_ref"]

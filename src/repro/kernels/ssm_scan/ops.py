@@ -1,0 +1,31 @@
+"""jit'd wrapper for the fused selective-scan kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.ssm_scan.kernel import ssm_scan_kernel
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan_fused(xc: jnp.ndarray, x_proj: jnp.ndarray,
+                   dt_bias: jnp.ndarray, a_log: jnp.ndarray,
+                   h0: Optional[jnp.ndarray] = None, chunk: int = 128,
+                   interpret: Optional[bool] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, t, d = xc.shape
+    n = a_log.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((b, d, n), jnp.float32)
+    interp = use_interpret() if interpret is None else interpret
+    y, h = ssm_scan_kernel(xc, x_proj, dt_bias, a_log, h0, chunk=chunk,
+                           interpret=interp)
+    return y[:, :t], h
+
+
+__all__ = ["ssm_scan_fused", "ssm_scan_ref"]

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the fused selective-scan kernel."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(xc: jnp.ndarray, x_proj: jnp.ndarray,
+                 dt_bias: jnp.ndarray, a_log: jnp.ndarray,
+                 h0: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential reference.
+
+    xc: [B, T, d] post-conv activations; x_proj: [d, 2n+1];
+    dt_bias: [d]; a_log: [d, n]; h0: [B, d, n].
+    Returns (y [B, T, d] f32, h_final [B, d, n] f32)."""
+    n = a_log.shape[1]
+    proj = xc.astype(jnp.float32) @ x_proj.astype(jnp.float32)
+    bb, cc, dtr = proj[..., :n], proj[..., n:2 * n], proj[..., 2 * n]
+    dt = jax.nn.softplus(dtr[..., None] + dt_bias)          # [B, T, d]
+    a = jnp.exp(-jnp.exp(a_log) * dt[..., None])            # [B, T, d, n]
+    bx = (dt * xc.astype(jnp.float32))[..., None] * bb[..., None, :]
+
+    def step(h, inp):
+        a_t, bx_t, c_t = inp
+        h = a_t * h + bx_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h, ys = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (a.transpose(1, 0, 2, 3), bx.transpose(1, 0, 2, 3),
+         cc.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2), h

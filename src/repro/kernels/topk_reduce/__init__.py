@@ -1,0 +1,1 @@
+from repro.kernels.topk_reduce.ops import *  # noqa

@@ -1,0 +1,30 @@
+"""jit'd wrapper for the streaming top-k kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.topk_reduce.kernel import topk_reduce_kernel
+from repro.kernels.topk_reduce.ref import topk_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block", "interpret"))
+def topk_reduce(scores: jnp.ndarray, k: int,
+                valid_count: Optional[jnp.ndarray] = None,
+                block: int = 1024,
+                interpret: Optional[bool] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Streaming top-k over [n] scores -> (values [k], indices [k])."""
+    n = scores.shape[0]
+    vc = jnp.asarray(n if valid_count is None else valid_count, jnp.int32)
+    interp = use_interpret() if interpret is None else interpret
+    return tuple(topk_reduce_kernel(scores, k, vc, block=block,
+                                    interpret=interp))
+
+
+__all__ = ["topk_reduce", "topk_ref"]

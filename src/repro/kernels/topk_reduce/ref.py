@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for streaming top-k selection."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_ref(scores: jnp.ndarray, k: int,
+             valid_count: jnp.ndarray | int | None = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k over [n] scores -> (values [k] desc, indices [k]).
+
+    Invalid entries (>= valid_count) are excluded (treated as -inf)."""
+    n = scores.shape[0]
+    if valid_count is not None:
+        mask = jnp.arange(n) < valid_count
+        scores = jnp.where(mask, scores, -jnp.inf)
+    return jax.lax.top_k(scores.astype(jnp.float32), k)

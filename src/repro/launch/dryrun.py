@@ -1,0 +1,98 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record roofline inputs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                    # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod        # 512 chips
+  PYTHONPATH=src python -m repro.launch.dryrun --shape train_4k \
+      --arch kimi-k2-1t-a32b --save-hlo reports/hlo/kimi_train.txt
+
+Results append to reports/dryrun.jsonl (one JSON per cell).
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import (ARCH_IDS, cells, get_config, get_shape,
+                           shape_skip_reason)
+from repro.launch.dryrun_lib import dry_run_cell
+from repro.launch.mesh import make_production_mesh
+from repro.train.step import StepConfig
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--grad-sync", default="fused")
+    ap.add_argument("--moe-mode", default="weight_gather")
+    ap.add_argument("--out", default="reports/dryrun.jsonl")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--no-collectives", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    print(f"mesh: {dict(mesh.shape)} ({mesh.size} chips)", flush=True)
+
+    archs = args.arch or list(ARCH_IDS)
+    shapes = args.shape or ["train_4k", "prefill_32k", "decode_32k",
+                            "long_500k"]
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            shape = get_shape(shape_name)
+            reason = shape_skip_reason(cfg, shape)
+            if reason:
+                print(f"SKIP {arch} x {shape_name}: {reason}", flush=True)
+                continue
+            print(f"RUN  {arch} x {shape_name} ...", flush=True)
+            t0 = time.monotonic()
+            try:
+                res = dry_run_cell(
+                    cfg, shape, mesh,
+                    extract_collectives=not args.no_collectives,
+                    step_cfg=StepConfig(grad_sync=args.grad_sync,
+                                        moe_mode=args.moe_mode),
+                    save_hlo=args.save_hlo)
+                res["multi_pod"] = args.multi_pod
+                res["tag"] = args.tag
+                res["grad_sync"] = args.grad_sync
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(res) + "\n")
+                print(f"  ok in {time.monotonic()-t0:.1f}s  "
+                      f"flops/dev={res['flops']:.3e} "
+                      f"bytes/dev={res['bytes']:.3e} "
+                      f"coll_wire={res['collectives'].get('wire_bytes', 0):.3e}"
+                      if res['collectives'] else "  ok", flush=True)
+                mem = res.get("memory", {})
+                if mem.get("peak_bytes"):
+                    print(f"  mem/dev: args={mem['argument_bytes']:.3e} "
+                          f"temp={mem['temp_bytes']:.3e} "
+                          f"peak={mem['peak_bytes']:.3e}", flush=True)
+            except Exception as e:
+                failures.append((arch, shape_name, repr(e)))
+                print(f"  FAIL {arch} x {shape_name}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for f in failures:
+            print(" ", f)
+        return 1
+    print("\nALL CELLS COMPILED")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,34 @@
+"""Production meshes (assignment spec).
+
+Importing this module never touches jax device state — meshes are built
+inside functions only."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """(16, 16) data x model single pod; (2, 16, 16) pod x data x model
+    for the 2-pod = 512-chip configuration."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — run "
+            "under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "(launch/dryrun.py does this)")
+    return jax.make_mesh(shape, axes, devices=devices[:n],
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes, devices=None) -> Mesh:
+    """Generic helper for tests/benchmarks."""
+    return jax.make_mesh(tuple(shape), tuple(axes), devices=devices,
+                         axis_types=(AxisType.Auto,) * len(axes))

@@ -1,0 +1,70 @@
+"""Batched serving driver: prefill a batch of prompts, decode N tokens.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import build_model
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--greedy", action="store_true", default=True)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(
+        args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    max_len = args.prompt_len + args.gen + (cfg.num_patches or 0)
+    batch = {"tokens": jnp.asarray(rng.integers(
+        0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)}
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(rng.normal(size=(
+            args.batch, cfg.encoder_seq, cfg.d_model)), cfg.param_dtype)
+    if cfg.family == "vlm" and cfg.num_patches:
+        batch["patch_embeds"] = jnp.asarray(rng.normal(size=(
+            args.batch, cfg.num_patches, cfg.d_model)), cfg.param_dtype)
+
+    t0 = time.monotonic()
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len))
+    logits, caches = prefill(params, batch)
+    jax.block_until_ready(logits)
+    t_pre = time.monotonic() - t0
+    decode = jax.jit(model.decode_step)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    out_tokens = [tok]
+    t0 = time.monotonic()
+    for i in range(args.gen - 1):
+        lg, caches = decode(params, caches, tok)
+        tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    t_dec = time.monotonic() - t0
+    gen = np.stack([np.asarray(t) for t in out_tokens], axis=1)
+    print(f"prefill: {t_pre*1e3:.1f} ms for {args.batch}x{args.prompt_len}")
+    print(f"decode:  {t_dec/max(args.gen-1,1)*1e3:.2f} ms/token "
+          f"(batch {args.batch})")
+    print("generated:", gen[:2].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,74 @@
+"""Unified model API over all families.
+
+``build_model(cfg)`` returns a :class:`Model` namespace with
+init / loss / forward / prefill / decode_step / logical_axes — the single
+surface the trainer, server, dry-run and tests all use.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.common import (ModelConfig, active_param_count,
+                                 param_count, param_count_analytic)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Any]              # loss(params, batch) -> (l, m)
+    forward: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    init_cache: Callable[..., Any]
+    logical_axes: Callable[[], Any]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "audio":
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_encdec(key, cfg),
+            loss=lambda p, b: encdec.encdec_loss(p, b, cfg),
+            forward=lambda p, b: encdec.forward(p, b, cfg),
+            prefill=lambda p, b, max_len: encdec.prefill(
+                p, b["frames"], b["tokens"], cfg, max_len),
+            decode_step=lambda p, caches, tok: encdec.decode_step(
+                p, caches, tok, cfg),
+            init_cache=None,
+            logical_axes=lambda: encdec.encdec_logical_axes(cfg))
+
+    def loss(p, b):
+        return transformer.lm_loss(p, b, cfg)
+
+    def fwd(p, b):
+        logits, _ = transformer.forward(
+            p, b["tokens"], cfg, patch_embeds=b.get("patch_embeds"))
+        return logits
+
+    def pre(p, b, max_len):
+        if cfg.family == "ssm":
+            return transformer.prefill_ssm(p, b["tokens"], cfg)
+        return transformer.prefill(p, b["tokens"], cfg, max_len=max_len,
+                                   patch_embeds=b.get("patch_embeds"))
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_lm(key, cfg),
+        loss=loss,
+        forward=fwd,
+        prefill=pre,
+        decode_step=lambda p, caches, tok: transformer.decode_step(
+            p, caches, tok, cfg),
+        init_cache=lambda batch, max_len: transformer.init_cache(
+            cfg, batch, max_len),
+        logical_axes=lambda: transformer.lm_logical_axes(cfg))
+
+
+__all__ = ["Model", "ModelConfig", "build_model", "param_count",
+           "param_count_analytic", "active_param_count"]

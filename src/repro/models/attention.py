@@ -1,0 +1,260 @@
+"""Attention: GQA + RoPE with three interchangeable implementations.
+
+impl = "ref"     — full score materialization (tiny smoke tests / oracles)
+impl = "chunked" — lax.scan over KV blocks with online softmax: O(chunk)
+                   memory, pure jnp, shard-agnostic.  This is the
+                   memory-efficient path the 512-device dry-run compiles
+                   (Pallas does not lower on the CPU host platform).
+impl = "pallas"  — the flash-attention kernel (TPU runtime path).
+
+Decode helpers maintain a KV cache [B, KV, S_max, hd] with a write cursor;
+``sliding window`` caches keep only the last `window` positions (ring
+buffer), which is what makes hymba's long_500k cell O(window) per step.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.models.common import ModelConfig, trunc_normal
+from repro.sharding import constrain
+
+Params = Dict[str, Any]
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, d_in: Optional[int] = None
+                   ) -> Params:
+    d = d_in or cfg.d_model
+    hd, H, KV = cfg.hd, cfg.num_heads, cfg.num_kv_heads
+    dt = cfg.param_dtype
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {"wq": trunc_normal(k1, (d, H, hd), dt),
+            "wk": trunc_normal(k2, (d, KV, hd), dt),
+            "wv": trunc_normal(k3, (d, KV, hd), dt),
+            "wo": trunc_normal(k4, (H, hd, d), dt)}
+
+
+def attention_logical_axes(cfg: ModelConfig) -> Params:
+    return {"wq": ("embed", "heads", "hd"),
+            "wk": ("embed", "kv", "hd"),
+            "wv": ("embed", "kv", "hd"),
+            "wo": ("heads", "hd", "embed")}
+
+
+def _project_qkv(p: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                 cfg: ModelConfig, rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if rope:
+        from repro.models.layers import apply_rope
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      causal: bool, window: Optional[int],
+                      chunk: int = 512,
+                      q_offset: int | jnp.ndarray = 0,
+                      kv_len: Optional[jnp.ndarray] = None,
+                      remat_chunks: bool = True) -> jnp.ndarray:
+    """Online-softmax attention scanning KV in blocks (pure jnp).
+
+    q: [B, Hq, Sq, hd]; k/v: [B, KV, Sk, hd].  ``q_offset``: absolute
+    position of q[0] minus kv[0] (right-aligned when Sq != Sk).
+    ``kv_len``: dynamic valid KV length (decode with a partially-filled
+    cache).  f32 accumulators; memory O(Sq * chunk).
+
+    Layout note: all per-chunk tensors stay in FULL-head space
+    [B, Hq, ...] (GQA KV is broadcast per chunk) with an explicit "heads"
+    sharding constraint — the grouped [B, KV, group, ...] layout defeats
+    head-TP propagation (a measured 4-16x per-device score blow-up;
+    EXPERIMENTS.md §Perf kimi-3).  ``remat_chunks`` recomputes chunk
+    internals in the backward pass instead of saving [nchunks, ...]
+    stacks.
+    """
+    b, hq, sq, hd = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    scale = 1.0 / (hd ** 0.5)
+    nchunks = (sk + chunk - 1) // chunk
+    pad = nchunks * chunk - sk
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kp = kp.reshape(b, hkv, nchunks, chunk, hd).transpose(2, 0, 1, 3, 4)
+    vp = vp.reshape(b, hkv, nchunks, chunk, hd).transpose(2, 0, 1, 3, 4)
+    # flash-style dtype discipline: big HBM tensors (q, k, v, p) stay in
+    # the input dtype; only softmax stats and the accumulator are f32
+    # (mirrors the Pallas kernel's VMEM behaviour on the XLA fallback —
+    # EXPERIMENTS.md §Perf kimi-5).  GQA stays in grouped-einsum form:
+    # materializing repeated KV amplified the per-chunk KV gather by
+    # `group`x on seq-sharded layouts (§Perf kimi-4/deepseek regression).
+    qg = q.reshape(b, hkv, group, sq, hd)
+    qpos = jnp.arange(sq) + q_offset          # absolute q positions
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ci, kc, vc = inp
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qg, kc,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = ci * chunk + jnp.arange(chunk)
+        mask = jnp.ones((sq, chunk), bool)
+        if causal or window is not None:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        mask &= (kpos < sk)[None, :]
+        if kv_len is not None:
+            mask &= (kpos < kv_len)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqc,bkcd->bkgqd", p.astype(q.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    if remat_chunks:
+        step = jax.checkpoint(step)
+    m0 = jnp.full((b, hkv, group, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(nchunks), kp, vp))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.reshape(b, hq, sq, hd).astype(q.dtype)
+
+
+def full_attention(q, k, v, causal, window, impl: str = "ref",
+                   chunk: int = 512, q_offset=0):
+    """Dispatch over implementations; q/k/v: [B, H(/KV), S, hd]."""
+    if impl == "pallas":
+        # kernel expects [B, H, S, D] layout
+        return flash_attention(q, k, v, causal=causal, window=window)
+    if impl == "chunked":
+        return chunked_attention(q, k, v, causal, window, chunk=chunk,
+                                 q_offset=q_offset)
+    return attention_ref(q, k, v, causal=causal, window=window)
+
+
+def resolve_impl(cfg: ModelConfig, seq: int) -> str:
+    if cfg.attn_impl != "auto":
+        return cfg.attn_impl
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    return "chunked" if seq > 2048 else "ref"
+
+
+def self_attention(p: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                   cfg: ModelConfig, window: Optional[int] = None,
+                   impl: Optional[str] = None, return_kv: bool = False):
+    """Causal self-attention over x: [B, S, d]."""
+    b, s, d = x.shape
+    impl = impl or resolve_impl(cfg, s)
+    q, k, v = _project_qkv(p, x, positions, cfg)
+    q = constrain(q, "batch", "seq", "heads", None)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = full_attention(qt, kt, vt, causal=True, window=window, impl=impl,
+                         chunk=cfg.attn_chunk)
+    out = out.transpose(0, 2, 1, 3)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    y = constrain(y, "batch", "seq", None)
+    if return_kv:
+        return y, (kt, vt)
+    return y
+
+
+# -- KV cache & decode ---------------------------------------------------------
+
+class KVCache:
+    """KV cache; ``window`` is static pytree metadata (0 = full cache,
+    >0 = ring buffer of the last `window` positions)."""
+
+    def __init__(self, k: jnp.ndarray, v: jnp.ndarray, pos: jnp.ndarray,
+                 window: int = 0):
+        self.k, self.v, self.pos, self.window = k, v, pos, int(window)
+
+    @property
+    def cache_len(self) -> int:
+        return self.k.shape[2]
+
+
+jax.tree_util.register_pytree_node(
+    KVCache,
+    lambda c: ((c.k, c.v, c.pos), c.window),
+    lambda window, ch: KVCache(ch[0], ch[1], ch[2], window=window))
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  window: Optional[int] = None,
+                  dtype=None) -> KVCache:
+    size = min(window, max_len) if window else max_len
+    dt = dtype or cfg.param_dtype
+    shape = (batch, cfg.num_kv_heads, size, cfg.hd)
+    return KVCache(k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt),
+                   pos=jnp.zeros((), jnp.int32), window=window or 0)
+
+
+def decode_attn_raw(p: Params, x: jnp.ndarray, k_cache: jnp.ndarray,
+                    v_cache: jnp.ndarray, pos: jnp.ndarray,
+                    cfg: ModelConfig, window: int = 0, rope: bool = True
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode against raw cache arrays.
+
+    x: [B, 1, d]; k/v_cache: [B, KV, S_cache, hd]; pos: absolute position
+    of the new token.  Returns (y [B, 1, d], k', v')."""
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(
+        p, x, jnp.full((b, 1), pos, jnp.int32), cfg, rope=rope)
+    size = k_cache.shape[2]
+    slot = (pos % size) if window else pos
+    k = jax.lax.dynamic_update_slice(
+        k_cache, k_new.transpose(0, 2, 1, 3).astype(k_cache.dtype),
+        (0, 0, slot, 0))
+    v = jax.lax.dynamic_update_slice(
+        v_cache, v_new.transpose(0, 2, 1, 3).astype(v_cache.dtype),
+        (0, 0, slot, 0))
+    qt = q.transpose(0, 2, 1, 3)                       # [B, H, 1, hd]
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    group = hq // hkv
+    scale = 1.0 / (cfg.hd ** 0.5)
+    # bf16 operands + f32 accumulate: upcasting k here makes XLA widen the
+    # whole carried cache to f32 (2x cache traffic; §Perf kimi-d3)
+    qg = qt.reshape(b, hkv, group, cfg.hd)
+    s = jnp.einsum("bkgd,bkcd->bkgc", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    cpos = jnp.arange(size)
+    if window:
+        # ring buffer holds positions (pos - size, pos]; all slots valid
+        # once pos + 1 >= size, else only slots 0..pos
+        valid = jnp.where(pos + 1 >= size, jnp.ones_like(cpos, bool),
+                          cpos <= pos)
+    else:
+        valid = cpos <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bkcd->bkgd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, hq, cfg.hd).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, k, v
+
+
+def decode_attention(p: Params, x: jnp.ndarray, cache: KVCache,
+                     cfg: ModelConfig, impl: str = "einsum",
+                     rope: bool = True) -> Tuple[jnp.ndarray, KVCache]:
+    """One-token decode: x [B, 1, d] against the cache."""
+    y, k, v = decode_attn_raw(p, x, cache.k, cache.v, cache.pos, cfg,
+                              window=cache.window, rope=rope)
+    return y, KVCache(k=k, v=v, pos=cache.pos + 1, window=cache.window)

@@ -1,0 +1,151 @@
+"""Shared layers: norms, RoPE, SwiGLU MLP, embeddings (sharding-annotated)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, trunc_normal
+from repro.sharding import constrain
+from repro.kernels.rmsnorm.ops import rmsnorm as rmsnorm_kernel
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+Params = Dict[str, Any]
+
+
+# -- norms -------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def apply_rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6,
+                  use_kernel: bool = False) -> jnp.ndarray:
+    if use_kernel:
+        return rmsnorm_kernel(x, p["scale"], eps=eps)
+    return rmsnorm_ref(x, p["scale"], eps=eps)
+
+
+def init_layernorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5
+                    ) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None) -> Params:
+    d = d or cfg.d_model
+    return (init_layernorm(d, cfg.param_dtype) if cfg.use_layernorm
+            else init_rmsnorm(d, cfg.param_dtype))
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.use_layernorm:
+        return apply_layernorm(p, x, eps=cfg.norm_eps)
+    return apply_rmsnorm(p, x, eps=cfg.norm_eps)
+
+
+# -- rotary position embeddings ----------------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: [B, S, H, hd]; positions: [B, S] (absolute)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B,S,hd/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# -- MLP ----------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.param_dtype
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.use_gelu:
+        return {"w1": trunc_normal(k1, (d, f), dt),
+                "b1": jnp.zeros((f,), dt),
+                "w2": trunc_normal(k2, (f, d), dt),
+                "b2": jnp.zeros((d,), dt)}
+    return {"w1": trunc_normal(k1, (d, f), dt),    # gate
+            "w3": trunc_normal(k3, (d, f), dt),    # up
+            "w2": trunc_normal(k2, (f, d), dt)}    # down
+
+
+def mlp_logical_axes(cfg: ModelConfig) -> Params:
+    if cfg.use_gelu:
+        return {"w1": ("embed", "ff"), "b1": ("ff",),
+                "w2": ("ff", "embed"), "b2": ("embed",)}
+    return {"w1": ("embed", "ff"), "w3": ("embed", "ff"),
+            "w2": ("ff", "embed")}
+
+
+def apply_mlp(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.use_gelu:
+        h = jax.nn.gelu(x @ p["w1"] + p["b1"])
+        return h @ p["w2"] + p["b2"]
+    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    h = constrain(h, "batch", "seq", "ff")
+    return h @ p["w2"]
+
+
+# -- embeddings ---------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig) -> Params:
+    dt = cfg.param_dtype
+    p = {"table": trunc_normal(key, (cfg.vocab_size, cfg.d_model), dt,
+                               scale=1.0)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = trunc_normal(
+            jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab_size), dt)
+    return p
+
+
+def embedding_logical_axes(cfg: ModelConfig) -> Params:
+    p = {"table": ("vocab", "embed_pod")}
+    if not cfg.tie_embeddings:
+        p["unembed"] = ("embed_pod", "vocab")
+    return p
+
+
+def embed_tokens(p: Params, tokens: jnp.ndarray,
+                 cfg: ModelConfig) -> jnp.ndarray:
+    x = jnp.take(p["table"], tokens, axis=0)
+    return constrain(x, "batch", "seq", None)
+
+
+def unembed(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Returns logits [..., vocab] (sharded over "vocab")."""
+    if cfg.tie_embeddings:
+        logits = x @ p["table"].T.astype(x.dtype)
+    else:
+        logits = x @ p["unembed"]
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean token NLL in f32; logits may be vocab-sharded (XLA reduces)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(nll)

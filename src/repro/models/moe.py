@@ -1,0 +1,230 @@
+"""Mixture-of-Experts FFN with expert-parallel dispatch = MaRe repartitionBy.
+
+The token->expert shuffle IS the paper's repartitionBy primitive
+(keyBy = router argmax, HashPartitioner = expert-owner map): tokens are
+packed into a [num_shards, capacity] send buffer with the same
+``_pack_by_dest`` used by ``MaRe.repartition_by`` and exchanged with one
+``lax.all_to_all`` over the ``model`` mesh axis (DESIGN.md §3.2).
+
+Two expert-compute layouts (a §Perf hillclimb axis):
+  * ``weight_gather`` — expert weights are FSDP-sharded over ``data`` and
+    all-gathered per layer (ZeRO-3; weight-stationary).
+  * ``token_gather``  — tokens are all-gathered over ``data`` and each data
+    shard computes its f-slice for the whole row, reduce-scattering the
+    output (activation-stationary TP).
+Dense reference path (no shard_map, exact) validates both.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.shuffle import _pack_by_dest, unpack_gather
+from repro.models.common import ModelConfig, trunc_normal
+from repro.sharding import active, constrain
+
+Params = Dict[str, Any]
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    dt = cfg.param_dtype
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {"router": trunc_normal(k1, (d, E), jnp.float32),
+            "w1": trunc_normal(k2, (E, d, f), dt),
+            "w3": trunc_normal(k3, (E, d, f), dt),
+            "w2": trunc_normal(k4, (E, f, d), dt)}
+
+
+def moe_logical_axes(cfg: ModelConfig) -> Params:
+    return {"router": ("embed", None),
+            "w1": ("experts", None, "expert_ff"),
+            "w3": ("experts", None, "expert_ff"),
+            "w2": ("experts", "expert_ff", None)}
+
+
+class MoEStats(NamedTuple):
+    aux_loss: jnp.ndarray        # load-balancing loss (f32 scalar)
+    dropped: jnp.ndarray         # tokens dropped to capacity (f32 scalar)
+
+
+def _route(p: Params, x2d: jnp.ndarray, cfg: ModelConfig):
+    """x2d: [T, d] -> (topk idx [T,k], gates [T,k], aux_loss)."""
+    logits = (x2d.astype(jnp.float32) @ p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e f_e * P_e
+    E = cfg.num_experts
+    onehot = jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32)
+    f_e = jnp.mean(onehot, axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f_e * p_e)
+    return idx, gates.astype(x2d.dtype), aux
+
+
+def _expert_mlp(w1, w3, w2, xs: jnp.ndarray, group_sizes: jnp.ndarray
+                ) -> jnp.ndarray:
+    """Grouped SwiGLU over tokens sorted by expert (ragged_dot)."""
+    h = jax.lax.ragged_dot(xs, w1, group_sizes)
+    u = jax.lax.ragged_dot(xs, w3, group_sizes)
+    h = jax.nn.silu(h) * u
+    return jax.lax.ragged_dot(h, w2, group_sizes)
+
+
+# ---------------------------------------------------------------------------
+# Dense reference path (exact; smoke tests + oracles)
+# ---------------------------------------------------------------------------
+
+def moe_ffn_dense(p: Params, x: jnp.ndarray, cfg: ModelConfig
+                  ) -> Tuple[jnp.ndarray, MoEStats]:
+    b, s, d = x.shape
+    x2 = x.reshape(-1, d)
+    t = x2.shape[0]
+    idx, gates, aux = _route(p, x2, cfg)
+    k = cfg.experts_per_token
+    flat_e = idx.reshape(-1)                       # [T*k]
+    flat_x = jnp.repeat(x2, k, axis=0)             # [T*k, d]
+    order = jnp.argsort(flat_e, stable=True)
+    xs = jnp.take(flat_x, order, axis=0, mode="clip")
+    es = jnp.take(flat_e, order, mode="clip")
+    group_sizes = jnp.bincount(es, length=cfg.num_experts)
+    ys = _expert_mlp(p["w1"], p["w3"], p["w2"], xs, group_sizes)
+    y_flat = jnp.zeros_like(flat_x).at[order].set(ys)
+    y = jnp.sum(y_flat.reshape(t, k, d) * gates[..., None], axis=1)
+    return y.reshape(b, s, d), MoEStats(aux_loss=aux,
+                                        dropped=jnp.zeros((), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel path: repartitionBy over the `model` axis (shard_map)
+# ---------------------------------------------------------------------------
+
+def moe_ffn_sharded(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                    mode: Optional[str] = None) -> Tuple[jnp.ndarray,
+                                                        MoEStats]:
+    """x: [B, S, d] sharded (batch->data(+pod), seq->model)."""
+    mode = mode or cfg.moe_mode
+    rules, mesh = active()
+    if mesh is None or "model" not in mesh.shape or \
+            mesh.shape["model"] == 1 or \
+            cfg.num_experts % mesh.shape["model"] != 0:
+        return moe_ffn_dense(p, x, cfg)
+    m = int(mesh.shape["model"])
+    e_loc = cfg.num_experts // m
+    k = cfg.experts_per_token
+    # FSDP axes for expert weights (everything except 'model')
+    fsdp_axes = tuple(a for a in mesh.axis_names if a != "model")
+    fsdp = 1
+    for a in fsdp_axes:
+        fsdp *= int(mesh.shape[a])
+    f = cfg.moe_d_ff
+    f_shard = (fsdp if (f % fsdp == 0 and fsdp > 1) else 1)
+    f_axes = fsdp_axes if f_shard > 1 else ()
+
+    batch_axes = rules.table.get("batch") if rules else "data"
+    if isinstance(batch_axes, str):
+        batch_axes = (batch_axes,)
+    seq_ax = rules.table.get("seq") if rules else "model"
+    b_dim, s_dim = x.shape[0], x.shape[1]
+    b_size = 1
+    for a in (batch_axes or ()):
+        b_size *= int(mesh.shape[a])
+    if b_dim % max(b_size, 1) != 0:
+        batch_axes = None
+    if seq_ax is not None and (s_dim % int(mesh.shape.get(seq_ax, 1)) != 0
+                               or s_dim == 1):
+        seq_ax = None  # decode / non-divisible: replicate seq over model
+
+    x_spec = P(batch_axes, seq_ax, None)
+    w_spec = P("model", None, f_axes if f_axes else None)
+    w2_spec = P("model", f_axes if f_axes else None, None)
+
+    def inner(xl, router, w1, w3, w2):
+        bl, sl, d = xl.shape
+        dt = cfg.param_dtype
+        x2 = xl.reshape(-1, d).astype(dt)
+        tl = x2.shape[0]
+        idx, gates, aux = _route({"router": router}, x2, cfg)
+        gates = gates.astype(dt)
+        flat_e = idx.reshape(-1)                   # [tl*k] expert ids
+        owner = flat_e // e_loc                    # destination model shard
+        src_slot = jnp.arange(tl * k, dtype=jnp.int32)
+        flat_x = jnp.repeat(x2, k, axis=0).astype(dt)
+        cap = max(1, int(tl * k / m * cfg.capacity_factor))
+        part_records = (flat_x, flat_e.astype(jnp.int32))
+        valid = jnp.ones((tl * k,), bool)
+        pack1 = _pack_by_dest(part_records, owner, valid, m, cap)
+        bx, be = pack1.buffer
+        rx = jax.lax.all_to_all(bx, "model", 0, 0)      # [m, cap, d]
+        re = jax.lax.all_to_all(be, "model", 0, 0)
+        rc = jax.lax.all_to_all(
+            pack1.counts.reshape(m, 1), "model", 0, 0).reshape(m)
+        dropped = pack1.dropped
+        slot_ok = (jnp.arange(cap)[None, :] < rc[:, None]).reshape(-1)
+        rx = rx.reshape(-1, d)
+        re_l = re.reshape(-1) - jax.lax.axis_index("model") * e_loc
+        re_l = jnp.where(slot_ok, re_l, e_loc)         # invalid -> sentinel
+        # pack by LOCAL expert into [e_loc, cap_e, d] blocks so the expert
+        # compute is one MXU-shaped batched einsum (ragged_dot decomposes
+        # to e_loc dense per-group matmuls over ALL rows on some backends —
+        # a measured ~14x flop waste; see EXPERIMENTS.md §Perf kimi-1).
+        cap_e = max(1, int(m * cap / e_loc * cfg.capacity_factor))
+        pack2 = _pack_by_dest((rx.astype(dt),), re_l, slot_ok, e_loc,
+                              cap_e)
+        (bx2,) = pack2.buffer
+        cnt_e = pack2.counts
+        if mode == "token_gather" and f_shard > 1:
+            # activation-stationary: replicate packed tokens over the fsdp
+            # axes, compute the local f-slice, reduce-scatter partial sums
+            # back (the down-proj contracts f so partials sum exactly).
+            xg = jax.lax.all_gather(bx2, f_axes, axis=1, tiled=True)
+            h = jnp.einsum("ecd,edf->ecf", xg, w1)
+            u = jnp.einsum("ecd,edf->ecf", xg, w3)
+            yg = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, w2)
+            ys_blk = jax.lax.psum_scatter(
+                yg, f_axes[0] if len(f_axes) == 1 else f_axes,
+                scatter_dimension=1, tiled=True)
+        else:
+            if f_shard > 1:
+                w1 = jax.lax.all_gather(w1, f_axes, axis=2, tiled=True)
+                w3 = jax.lax.all_gather(w3, f_axes, axis=2, tiled=True)
+                w2 = jax.lax.all_gather(w2, f_axes, axis=1, tiled=True)
+            h = jnp.einsum("ecd,edf->ecf", bx2, w1)
+            u = jnp.einsum("ecd,edf->ecf", bx2, w3)
+            ys_blk = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, w2)
+        # gather expert outputs back to recv-slot layout (pure gather —
+        # the pack's inverse; dropped slots read the sentinel zero row)
+        y_unsort = unpack_gather(ys_blk.reshape(-1, d), pack2, cap_e)
+        dropped = dropped + pack2.dropped
+        y_buf = y_unsort.reshape(m, cap, d)
+        y_back = jax.lax.all_to_all(y_buf, "model", 0, 0)  # [m, cap, d]
+        y_per_choice = unpack_gather(y_back.reshape(-1, d), pack1, cap)
+        y2 = jnp.sum(y_per_choice.reshape(tl, k, d) *
+                     gates[..., None], axis=1)
+        all_axes = tuple(mesh.axis_names)
+        n_drop = jax.lax.psum(dropped.astype(jnp.float32), all_axes)
+        aux = jax.lax.pmean(aux, all_axes)
+        return (y2.reshape(bl, sl, d), aux[None],
+                n_drop.astype(jnp.float32)[None])
+
+    y, aux, dropped = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(x_spec, P(None, None), w_spec, w_spec, w2_spec),
+        out_specs=(x_spec, P(), P()),
+        check_vma=False,
+    )(x, p["router"], p["w1"], p["w3"], p["w2"])
+    return y, MoEStats(aux_loss=aux[0], dropped=dropped[0])
+
+
+def moe_ffn(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+            mode: Optional[str] = None) -> Tuple[jnp.ndarray, MoEStats]:
+    _, mesh = active()
+    if mesh is not None and mesh.shape.get("model", 1) > 1 and \
+            cfg.num_experts % mesh.shape["model"] == 0:
+        return moe_ffn_sharded(p, x, cfg, mode=mode or cfg.moe_mode)
+    return moe_ffn_dense(p, x, cfg)

@@ -1,0 +1,159 @@
+"""Selective SSM (Mamba-style) block with chunked scan + O(1) decode state.
+
+Train/prefill uses a *chunked* selective scan: within a chunk the linear
+recurrence h_t = a_t * h_{t-1} + b_t is evaluated with an associative scan
+(parallel, VPU-friendly); chunks are chained with a tiny carried state via
+``lax.scan`` — memory O(chunk * d_inner * n) instead of O(seq * ...), which
+is what lets hymba's 32k prefill fit (DESIGN.md §5).
+
+Decode keeps (conv window, h state) — constant per step, which is why the
+SSM/hybrid archs are the ones assigned the 524k-token cell.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, trunc_normal
+from repro.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+def init_ssm(key, cfg: ModelConfig, d_in: Optional[int] = None) -> Params:
+    d = d_in or cfg.d_model
+    di = d * max(cfg.ssm_expand, 1)
+    n = cfg.ssm_state
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": trunc_normal(ks[0], (d, 2 * di), dt),
+        "conv_w": trunc_normal(ks[1], (cfg.ssm_conv, di), dt),
+        "x_proj": trunc_normal(ks[2], (di, 2 * n + 1), dt),  # B, C, dt
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (di, 1))),                  # [di, n]
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": trunc_normal(ks[3], (di, d), dt),
+    }
+
+
+def ssm_logical_axes(cfg: ModelConfig) -> Params:
+    return {"in_proj": ("embed", "ff"), "conv_w": ("conv", "ff"),
+            "x_proj": ("ff", None), "dt_bias": ("ff",),
+            "a_log": ("ff", "state"), "d_skip": ("ff",),
+            "out_proj": ("ff", "embed")}
+
+
+class SSMState(NamedTuple):
+    conv: jnp.ndarray    # [B, conv_width-1, di] trailing inputs
+    h: jnp.ndarray       # [B, di, n] recurrent state (f32)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int,
+                   d_in: Optional[int] = None) -> SSMState:
+    d = d_in or cfg.d_model
+    di = d * max(cfg.ssm_expand, 1)
+    return SSMState(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, di), cfg.param_dtype),
+        h=jnp.zeros((batch, di, cfg.ssm_state), jnp.float32))
+
+
+def _ssm_coeffs(p: Params, xc: jnp.ndarray):
+    """xc: [..., di] post-conv activations -> (a, bx, c) scan coefficients.
+
+    a = exp(dt * A)  [.., di, n];  bx = dt * B * x  [.., di, n];  c [.., n].
+    """
+    proj = xc @ p["x_proj"].astype(xc.dtype)             # [.., 2n+1]
+    n = p["a_log"].shape[1]
+    bb, cc, dtr = (proj[..., :n], proj[..., n:2 * n], proj[..., 2 * n])
+    dt_ = jax.nn.softplus(dtr.astype(jnp.float32)[..., None]
+                          + p["dt_bias"])                # [.., di]
+    a = jnp.exp(-jnp.exp(p["a_log"]) * dt_[..., None])   # [.., di, n]
+    bx = (dt_ * xc.astype(jnp.float32))[..., None] * \
+        bb.astype(jnp.float32)[..., None, :]             # [.., di, n]
+    return a, bx, cc.astype(jnp.float32)
+
+
+def _chunk_scan(a, bx, h0):
+    """Associative scan of h_t = a_t h_{t-1} + bx_t within a chunk.
+
+    a, bx: [T, B, di, n]; h0: [B, di, n] -> (h_all [T, B, di, n], h_T)."""
+    def combine(x, y):
+        ax, bxx = x
+        ay, byy = y
+        return ax * ay, ay * bxx + byy
+
+    a_c, b_c = jax.lax.associative_scan(combine, (a, bx), axis=0)
+    h_all = a_c * h0[None] + b_c
+    return h_all, h_all[-1]
+
+
+def ssm_scan(p: Params, xc: jnp.ndarray, cfg: ModelConfig,
+             h0: Optional[jnp.ndarray] = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """xc: [B, S, di] -> (y [B, S, di], h_final [B, di, n]).
+
+    Chunked: lax.scan over chunks of cfg.ssm_chunk."""
+    b, s, di = xc.shape
+    n = cfg.ssm_state
+    chunk = min(cfg.ssm_chunk, s)
+    pad = (-s) % chunk
+    xp = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+    nc = xp.shape[1] // chunk
+    xp = xp.reshape(b, nc, chunk, di).transpose(1, 2, 0, 3)  # [nc,T,B,di]
+    # padded steps must be identity on the carried state (a=1, bx=0)
+    valid = (jnp.arange(nc * chunk) < s).reshape(nc, chunk)
+    if h0 is None:
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+
+    def step(h, inp):
+        xch, vch = inp
+        a, bx, c = _ssm_coeffs(p, xch)                   # [T,B,di,n],[T,B,n]
+        v = vch[:, None, None, None]
+        a = jnp.where(v, a, 1.0)
+        bx = jnp.where(v, bx, 0.0)
+        h_all, h_last = _chunk_scan(a, bx, h)
+        y = jnp.einsum("tbdn,tbn->tbd", h_all, c)
+        return h_last, y
+
+    # recompute chunk internals in backward: the [T,B,di,n] coefficient
+    # tensors are the dominant SSM memory cost (§Perf hymba-2)
+    step = jax.checkpoint(step)
+    h_final, ys = jax.lax.scan(step, h0, (xp, valid))
+    y = ys.transpose(2, 0, 1, 3).reshape(b, nc * chunk, di)[:, :s]
+    y = y + xc.astype(jnp.float32) * p["d_skip"]
+    return y.astype(xc.dtype), h_final
+
+
+def ssm_block(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+              state: Optional[SSMState] = None
+              ) -> Tuple[jnp.ndarray, Optional[SSMState]]:
+    """Full Mamba-ish block: in_proj -> conv -> SiLU -> SSM -> gate -> out.
+
+    x: [B, S, d].  With ``state`` given, runs statefully (S may be 1 for
+    decode) and returns the updated state.
+    """
+    b, s, d = x.shape
+    di = d * max(cfg.ssm_expand, 1)
+    xz = x @ p["in_proj"]                                 # [B, S, 2*di]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    # depthwise causal conv along seq
+    cw = cfg.ssm_conv
+    if state is not None:
+        xin = jnp.concatenate([state.conv.astype(xi.dtype), xi], axis=1)
+    else:
+        xin = jnp.pad(xi, ((0, 0), (cw - 1, 0), (0, 0)))
+    conv = sum(xin[:, i:i + s] * p["conv_w"][i] for i in range(cw))
+    xc = jax.nn.silu(conv)
+    h0 = state.h if state is not None else None
+    y, h_final = ssm_scan(p, xc, cfg, h0=h0)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    new_state = None
+    if state is not None:
+        tail = xin[:, -(cw - 1):] if cw > 1 else xin[:, :0]
+        new_state = SSMState(conv=tail.astype(cfg.param_dtype), h=h_final)
+    return out, new_state

@@ -1,0 +1,115 @@
+"""Context-parallel selective scan: sequence sharded over a mesh axis.
+
+The SSM recurrence h_t = a_t h_{t-1} + bx_t is linear in the carried
+state, so a sequence split across S shards needs only a tiny cross-shard
+exchange (DESIGN.md §5, EXPERIMENTS §Perf hymba-prefill):
+
+  pass 1  (local)   : h_last^s = scan(x^s, h0=0),  A^s = prod_t a_t^s
+  exchange (tiny)   : all_gather of (h_last^s, A^s) — [S, B, d, n] each
+  prefix  (local)   : h_in^s = sum_{r<s} (prod_{r<q<s} A^q) h_last^r
+  pass 2  (local)   : y^s = scan(x^s, h0=h_in^s)
+
+Cost: 2x local scan compute + one all_gather of O(B·d·n) — versus
+replicating the whole sequence on every device.  The depthwise conv
+preceding the scan gets its (width-1)-token halo from the left neighbour
+via one ppermute.
+
+This is itself MaRe-shaped: the exchange is a tiny reduce over the
+sequence axis — partition-local work plus one explicit, bounded shuffle.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+from repro.models.ssm import ssm_scan
+
+Params = Dict[str, Any]
+
+
+def _local_decay_product(p: Params, xc: jnp.ndarray, cfg: ModelConfig
+                         ) -> jnp.ndarray:
+    """prod_t a_t over the local sequence: [B, d_i, n] (f32)."""
+    from repro.models.ssm import _ssm_coeffs
+    b, s, di = xc.shape
+    chunk = min(cfg.ssm_chunk, s)
+    pad = (-s) % chunk
+    xp = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+    nc = xp.shape[1] // chunk
+    xp = xp.reshape(b, nc, chunk, di).transpose(1, 2, 0, 3)
+    valid = (jnp.arange(nc * chunk) < s).reshape(nc, chunk)
+
+    def step(acc, inp):
+        xch, vch = inp
+        a, _, _ = _ssm_coeffs(p, xch)
+        a = jnp.where(vch[:, None, None, None], a, 1.0)
+        return acc * jnp.prod(a, axis=0), None
+
+    n = cfg.ssm_state
+    acc0 = jnp.ones((b, di, n), jnp.float32)
+    acc, _ = jax.lax.scan(step, acc0, (xp, valid))
+    return acc
+
+
+def ssm_block_context_parallel(
+    p: Params, x: jnp.ndarray, cfg: ModelConfig, mesh: Mesh,
+    seq_axis: str = "model",
+    batch_axes: Optional[Tuple[str, ...]] = ("data",),
+) -> jnp.ndarray:
+    """Mamba-style block with the sequence sharded over ``seq_axis``.
+
+    x: [B, S, d] with S sharded over ``seq_axis`` (and B over
+    ``batch_axes``).  Returns y with the same sharding.  Train/prefill
+    only (stateless interface; the returned final state is discarded).
+    """
+    n_seq = int(mesh.shape[seq_axis])
+    b_dim = x.shape[0]
+    b_axes = tuple(a for a in (batch_axes or ())
+                   if b_dim % int(mesh.shape[a]) == 0) or None
+    spec = P(b_axes, seq_axis, None)
+    cw = cfg.ssm_conv
+
+    def inner(xl):
+        bl, sl, d = xl.shape
+        di = d * max(cfg.ssm_expand, 1)
+        xz = xl @ p["in_proj"]
+        xi, z = jnp.split(xz, 2, axis=-1)
+        # conv halo: last (cw-1) tokens from the left neighbour
+        idx = jax.lax.axis_index(seq_axis)
+        halo = jax.lax.ppermute(
+            xi[:, -(cw - 1):], seq_axis,
+            [(s, s + 1) for s in range(n_seq - 1)]) if cw > 1 else \
+            xi[:, :0]
+        halo = jnp.where(jnp.reshape(idx > 0, (1, 1, 1)), halo, 0.0)
+        xin = jnp.concatenate([halo.astype(xi.dtype), xi], axis=1)
+        conv = sum(xin[:, i:i + sl] * p["conv_w"][i] for i in range(cw))
+        xc = jax.nn.silu(conv)
+        # pass 1: local final state + decay product
+        _, h_last = ssm_scan(p, xc, cfg,
+                             h0=jnp.zeros((bl, di, cfg.ssm_state),
+                                          jnp.float32))
+        a_prod = _local_decay_product(p, xc, cfg)
+        # exchange: [n_seq, B, di, n] each (tiny)
+        h_all = jax.lax.all_gather(h_last, seq_axis)
+        a_all = jax.lax.all_gather(a_prod, seq_axis)
+        # exclusive prefix for this shard (static loop over n_seq)
+        h_in = jnp.zeros_like(h_last)
+        for r in range(n_seq - 1):
+            # contribution of shard r to shards s > r
+            decay = jnp.ones_like(a_prod)
+            contrib = h_all[r]
+            for s in range(r + 1, n_seq):
+                active = (idx == s)
+                h_in = h_in + jnp.where(active, contrib * decay, 0.0)
+                decay = decay * a_all[s]
+        # pass 2: corrected scan
+        y, _ = ssm_scan(p, xc, cfg, h0=h_in)
+        y = y * jax.nn.silu(z)
+        return y @ p["out_proj"]
+
+    return jax.shard_map(inner, mesh=mesh, in_specs=spec, out_specs=spec,
+                         check_vma=False)(x)

@@ -1,0 +1,628 @@
+"""Decoder LM assembly for all families: dense / moe / hybrid / ssm / vlm.
+
+Layer stacks are scanned (``lax.scan`` over stacked params) with optional
+remat — keeps HLO size O(1) in depth, which is what makes the 95-layer
+deepseek-67b and 61-layer kimi-k2 dry-runs compile quickly at 512 devices.
+Heterogeneous stacks (hymba's 3 global-attention layers, xLSTM's 7:1
+mLSTM:sLSTM pattern) stay scannable via (a) traced per-layer window sizes
+and (b) scanned units of (k-1) mLSTM + 1 sLSTM blocks.
+
+Decode paths use python loops over layers (graphs are tiny; heterogeneous
+caches are natural) — see ``decode_step``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.attention import KVCache, init_kv_cache
+from repro.models.common import ModelConfig, trunc_normal
+from repro.models.layers import (apply_mlp, apply_norm, cross_entropy,
+                                 embed_tokens, embedding_logical_axes,
+                                 init_embedding, init_mlp, init_norm,
+                                 mlp_logical_axes, unembed)
+from repro.sharding import constrain
+
+Params = Dict[str, Any]
+BIG_WINDOW = 1 << 30   # "global attention" encoded as a huge window
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": init_norm(cfg), "norm2": init_norm(cfg)}
+    if cfg.family in ("dense", "vlm", "audio"):
+        p["attn"] = attn_lib.init_attention(ks[0], cfg)
+        p["mlp"] = init_mlp(ks[1], cfg)
+    elif cfg.family == "moe":
+        p["attn"] = attn_lib.init_attention(ks[0], cfg)
+        p["moe"] = moe_lib.init_moe(ks[1], cfg)
+    elif cfg.family == "hybrid":
+        p["attn"] = attn_lib.init_attention(ks[0], cfg)
+        p["ssm"] = ssm_lib.init_ssm(ks[1], cfg)
+        p["mlp"] = init_mlp(ks[2], cfg)
+        p["norm_a"] = init_norm(cfg)
+        p["norm_s"] = init_norm(cfg)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def block_logical_axes(cfg: ModelConfig) -> Params:
+    norm = {"scale": ("embed",)} if not cfg.use_layernorm else \
+        {"scale": ("embed",), "bias": ("embed",)}
+    p: Params = {"norm1": dict(norm), "norm2": dict(norm)}
+    if cfg.family in ("dense", "vlm", "audio"):
+        p["attn"] = attn_lib.attention_logical_axes(cfg)
+        p["mlp"] = mlp_logical_axes(cfg)
+    elif cfg.family == "moe":
+        p["attn"] = attn_lib.attention_logical_axes(cfg)
+        p["moe"] = moe_lib.moe_logical_axes(cfg)
+    elif cfg.family == "hybrid":
+        p["attn"] = attn_lib.attention_logical_axes(cfg)
+        p["ssm"] = ssm_lib.ssm_logical_axes(cfg)
+        p["mlp"] = mlp_logical_axes(cfg)
+        p["norm_a"] = dict(norm)
+        p["norm_s"] = dict(norm)
+    return p
+
+
+def apply_block(p: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                cfg: ModelConfig, window=None,
+                moe_mode: Optional[str] = None,
+                return_kv: bool = False):
+    """Returns (x', aux_loss[, (kt, vt)])."""
+    aux = jnp.zeros((), jnp.float32)
+    kv = None
+    h = apply_norm(cfg, p["norm1"], x)
+    if cfg.family == "hybrid":
+        a = attn_lib.self_attention(p["attn"], h, positions, cfg,
+                                    window=window)
+        s, _ = ssm_lib.ssm_block(p["ssm"], h, cfg)
+        a = apply_norm(cfg, p["norm_a"], a)
+        s = apply_norm(cfg, p["norm_s"], s)
+        x = x + 0.5 * (a + s)
+    else:
+        a = attn_lib.self_attention(p["attn"], h, positions, cfg,
+                                    window=window, return_kv=return_kv)
+        if return_kv:
+            a, kv = a
+        x = x + a
+    x = constrain(x, "batch", "seq", None)
+    h = apply_norm(cfg, p["norm2"], x)
+    if cfg.family == "moe":
+        y, stats = moe_lib.moe_ffn(p["moe"], h, cfg, mode=moe_mode)
+        aux = aux + stats.aux_loss
+    else:
+        y = apply_mlp(p["mlp"], h, cfg)
+    x = x + y
+    x = constrain(x, "batch", "seq", None)
+    if return_kv:
+        return x, aux, kv
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# xLSTM stack (units of (k-1) mLSTM + 1 sLSTM)
+# ---------------------------------------------------------------------------
+
+def _xlstm_unit_shape(cfg: ModelConfig) -> Tuple[int, int]:
+    k = cfg.slstm_every or cfg.num_layers + 1
+    if k > cfg.num_layers:
+        return cfg.num_layers, 0     # all-mLSTM
+    assert cfg.num_layers % k == 0, (cfg.num_layers, k)
+    return k - 1, cfg.num_layers // k
+
+
+def init_xlstm_stack(key, cfg: ModelConfig) -> Params:
+    m_per, units = _xlstm_unit_shape(cfg)
+    if units == 0:
+        keys = jax.random.split(key, cfg.num_layers)
+        m = jax.vmap(lambda k: {"norm": init_norm(cfg),
+                                "core": xlstm_lib.init_mlstm(k, cfg)})(keys)
+        return {"m_blocks": m}
+    km = jax.random.split(jax.random.fold_in(key, 0), units * m_per)
+    ks = jax.random.split(jax.random.fold_in(key, 1), units)
+    m = jax.vmap(lambda k: {"norm": init_norm(cfg),
+                            "core": xlstm_lib.init_mlstm(k, cfg)})(km)
+    m = jax.tree.map(lambda l: l.reshape(units, m_per, *l.shape[1:]), m)
+    s = jax.vmap(lambda k: {"norm": init_norm(cfg),
+                            "core": xlstm_lib.init_slstm(k, cfg)})(ks)
+    return {"m_blocks": m, "s_blocks": s}
+
+
+def xlstm_stack_logical_axes(cfg: ModelConfig) -> Params:
+    m_per, units = _xlstm_unit_shape(cfg)
+    norm = {"scale": ("embed",)}
+    m = {"norm": dict(norm), "core": xlstm_lib.mlstm_logical_axes(cfg)}
+    m = jax.tree.map(lambda ax: (("layers", "layers") if units else
+                                 ("layers",)) + tuple(ax), m,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    out = {"m_blocks": m}
+    if units:
+        s = {"norm": dict(norm), "core": xlstm_lib.slstm_logical_axes(cfg)}
+        out["s_blocks"] = jax.tree.map(
+            lambda ax: ("layers",) + tuple(ax), s,
+            is_leaf=lambda t: isinstance(t, tuple))
+    return out
+
+
+def apply_xlstm_stack(p: Params, x: jnp.ndarray, cfg: ModelConfig
+                      ) -> jnp.ndarray:
+    m_per, units = _xlstm_unit_shape(cfg)
+
+    def m_block(x, bp):
+        h = apply_norm(cfg, bp["norm"], x)
+        y, _ = xlstm_lib.mlstm_block(bp["core"], h, cfg)
+        return x + y
+
+    def s_block(x, bp):
+        h = apply_norm(cfg, bp["norm"], x)
+        y, _ = xlstm_lib.slstm_block(bp["core"], h, cfg)
+        return x + y
+
+    if units == 0:
+        def body(x, bp):
+            return (m_block(x, bp), None)
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body, x, p["m_blocks"])
+        return x
+
+    def unit(x, up):
+        def inner(x, bp):
+            return m_block(x, bp), None
+        x, _ = jax.lax.scan(inner, x, up["m"])
+        return s_block(x, up["s"]), None
+
+    unit = jax.checkpoint(unit) if cfg.remat else unit
+    x, _ = jax.lax.scan(unit, x, {"m": p["m_blocks"], "s": p["s_blocks"]})
+    return x
+
+
+# ---------------------------------------------------------------------------
+# LM init / forward
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    k_embed, k_blocks, k_extra = jax.random.split(key, 3)
+    params: Params = {"embed": init_embedding(k_embed, cfg),
+                      "final_norm": init_norm(cfg)}
+    if cfg.family == "ssm":
+        params["xlstm"] = init_xlstm_stack(k_blocks, cfg)
+    else:
+        keys = jax.random.split(k_blocks, cfg.num_layers)
+        params["blocks"] = jax.vmap(
+            lambda k: init_block(k, cfg))(keys)
+    if cfg.family == "vlm" and cfg.num_patches:
+        params["patch_proj"] = trunc_normal(
+            k_extra, (cfg.d_model, cfg.d_model), cfg.param_dtype)
+    return params
+
+
+def lm_logical_axes(cfg: ModelConfig) -> Params:
+    p: Params = {"embed": embedding_logical_axes(cfg),
+                 "final_norm": {"scale": ("embed",)} if not cfg.use_layernorm
+                 else {"scale": ("embed",), "bias": ("embed",)}}
+    if cfg.family == "ssm":
+        p["xlstm"] = xlstm_stack_logical_axes(cfg)
+    else:
+        blocks = block_logical_axes(cfg)
+        p["blocks"] = jax.tree.map(
+            lambda ax: ("layers",) + tuple(ax), blocks,
+            is_leaf=lambda t: isinstance(t, tuple))
+    if cfg.family == "vlm" and cfg.num_patches:
+        p["patch_proj"] = ("embed", None)
+    return p
+
+
+import numpy as _np
+
+
+def layer_windows(cfg: ModelConfig) -> Optional[_np.ndarray]:
+    """Per-layer attention window (host array: static for cache setup,
+    convertible for scan).  None = uniform full attention."""
+    if cfg.window is None:
+        return None
+    w = [cfg.window] * cfg.num_layers
+    for g in cfg.global_layers:
+        w[g] = BIG_WINDOW
+    return _np.asarray(w, _np.int32)
+
+
+def forward(params: Params, tokens: jnp.ndarray, cfg: ModelConfig,
+            patch_embeds: Optional[jnp.ndarray] = None,
+            moe_mode: Optional[str] = None,
+            return_kv: bool = False):
+    """tokens: [B, S_text] -> (logits [B, S, V], aux_loss[, (K, V)]).
+
+    For vlm, ``patch_embeds`` [B, P, d] (stub frontend output) are
+    projected and prepended; S = P + S_text.  With ``return_kv`` (uniform
+    full-attention stacks only) the scan also emits the per-layer KV
+    stacks [L, B, KV, S, hd] — the scanned-prefill path.
+    """
+    x = embed_tokens(params["embed"], tokens, cfg)
+    if patch_embeds is not None:
+        pe = patch_embeds.astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    aux_total = jnp.zeros((), jnp.float32)
+    kv_stack = None
+
+    if cfg.family == "ssm":
+        assert not return_kv
+        x = apply_xlstm_stack(params["xlstm"], x, cfg)
+    else:
+        windows = layer_windows(cfg)
+        assert not (return_kv and cfg.family == "hybrid")
+
+        def body(carry, layer_in):
+            x, aux = carry
+            bp = layer_in["p"]
+            w = layer_in.get("w")
+            out = apply_block(bp, x, positions, cfg, window=w,
+                              moe_mode=moe_mode, return_kv=return_kv)
+            if return_kv:
+                x, a, kv = out
+                return (x, aux + a), kv
+            x, a = out
+            return (x, aux + a), None
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        layer_in = {"p": params["blocks"]}
+        if windows is not None:
+            layer_in["w"] = jnp.asarray(windows, jnp.int32)
+        if cfg.scan_layers:
+            (x, aux_total), kv_stack = jax.lax.scan(
+                body, (x, aux_total), layer_in)
+        else:
+            kvs = []
+            for i in range(cfg.num_layers):
+                li = jax.tree.map(lambda l: l[i], layer_in)
+                (x, aux_total), kv = body((x, aux_total), li)
+                kvs.append(kv)
+            if return_kv:
+                kv_stack = jax.tree.map(lambda *ls: jnp.stack(ls), *kvs)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(params["embed"], x, cfg)
+    if return_kv:
+        return logits, aux_total, kv_stack
+    return logits, aux_total
+
+
+def lm_loss(params: Params, batch: Dict[str, jnp.ndarray],
+            cfg: ModelConfig, moe_mode: Optional[str] = None,
+            aux_weight: float = 0.01) -> Tuple[jnp.ndarray, Dict]:
+    logits, aux = forward(params, batch["tokens"], cfg,
+                          patch_embeds=batch.get("patch_embeds"),
+                          moe_mode=moe_mode)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:       # vlm: skip patch positions
+        logits = logits[:, -labels.shape[1]:]
+    loss = cross_entropy(logits, labels, batch.get("mask"))
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux_loss": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+class StackedKV:
+    """Uniform full-attention cache: k/v [L, B, KV, S_cache, hd].
+
+    Decode scans over layers (stacked params + stacked cache) — O(1) HLO
+    in depth, which keeps the 95-layer decode_32k dry-run compile small."""
+
+    def __init__(self, k: jnp.ndarray, v: jnp.ndarray, pos: jnp.ndarray):
+        self.k, self.v, self.pos = k, v, pos
+
+    @property
+    def cache_len(self) -> int:
+        return self.k.shape[3]
+
+
+jax.tree_util.register_pytree_node(
+    StackedKV,
+    lambda c: ((c.k, c.v, c.pos), None),
+    lambda _, ch: StackedKV(*ch))
+
+
+def init_stacked_cache(cfg: ModelConfig, batch: int, max_len: int,
+                       dtype=None) -> StackedKV:
+    dt = dtype or cfg.param_dtype
+    shape = (cfg.num_layers, batch, cfg.num_kv_heads, max_len, cfg.hd)
+    return StackedKV(k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt),
+                     pos=jnp.zeros((), jnp.int32))
+
+
+def prefill_scanned(params: Params, tokens: jnp.ndarray, cfg: ModelConfig,
+                    max_len: int,
+                    patch_embeds: Optional[jnp.ndarray] = None,
+                    moe_mode: Optional[str] = None):
+    """Scanned prefill for uniform stacks (dense / moe / vlm)."""
+    logits, _, (kt, vt) = forward(params, tokens, cfg,
+                                  patch_embeds=patch_embeds,
+                                  moe_mode=moe_mode, return_kv=True)
+    s = kt.shape[3]
+    L, b = kt.shape[0], kt.shape[1]
+    kc = jnp.zeros((L, b, cfg.num_kv_heads, max_len, cfg.hd), kt.dtype)
+    vc = jnp.zeros_like(kc)
+    kc = jax.lax.dynamic_update_slice(kc, kt, (0, 0, 0, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, vt, (0, 0, 0, 0, 0))
+    return logits, StackedKV(k=kc, v=vc, pos=jnp.asarray(s, jnp.int32))
+
+
+def decode_step_scanned(params: Params, cache: StackedKV,
+                        tokens: jnp.ndarray, cfg: ModelConfig,
+                        moe_mode: Optional[str] = None):
+    """tokens [B] -> (logits [B, V], cache') via lax.scan over layers."""
+    x = embed_tokens(params["embed"], tokens[:, None], cfg)
+    pos = cache.pos
+
+    def body(x, per_layer):
+        bp, kc, vc = per_layer["p"], per_layer["k"], per_layer["v"]
+        h = apply_norm(cfg, bp["norm1"], x)
+        a, k2, v2 = attn_lib.decode_attn_raw(bp["attn"], h, kc, vc, pos,
+                                             cfg)
+        x = x + a
+        h = apply_norm(cfg, bp["norm2"], x)
+        if cfg.family == "moe":
+            y, _ = moe_lib.moe_ffn(bp["moe"], h, cfg, mode=moe_mode)
+        else:
+            y = apply_mlp(bp["mlp"], h, cfg)
+        # keep the stacked-cache writeback in the cache dtype: an f32
+        # update slice makes XLA convert the WHOLE cache f32 and back
+        # per layer (a measured 73%-of-traffic artifact; §Perf kimi-d2)
+        return x + y, (k2.astype(kc.dtype), v2.astype(vc.dtype))
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, {"p": params["blocks"], "k": cache.k, "v": cache.v})
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(params["embed"], x, cfg)
+    return logits[:, 0], StackedKV(k=k_new, v=v_new, pos=pos + 1)
+
+
+class LayerCache(NamedTuple):
+    kind: str                       # static: attn | ssm | mlstm | slstm
+    kv: Optional[KVCache] = None
+    ssm: Optional[ssm_lib.SSMState] = None
+    mls: Optional[xlstm_lib.MLSTMState] = None
+    sls: Optional[xlstm_lib.SLSTMState] = None
+
+
+jax.tree_util.register_pytree_node(
+    LayerCache,
+    lambda c: ((c.kv, c.ssm, c.mls, c.sls), c.kind),
+    lambda kind, ch: LayerCache(kind, *ch))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int
+               ) -> List[Any]:
+    """Per-layer cache list.  SWA layers get ring buffers (O(window));
+    SSM/xLSTM layers get O(1) recurrent state — the long_500k enabler."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        return init_stacked_cache(cfg, batch, max_len)
+    caches: List[Any] = []
+    if cfg.family == "ssm":
+        m_per, units = _xlstm_unit_shape(cfg)
+        for u in range(max(units, 1)):
+            for i in range(m_per if units else cfg.num_layers):
+                caches.append(LayerCache(
+                    "mlstm", mls=xlstm_lib.init_mlstm_state(cfg, batch)))
+            if units:
+                caches.append(LayerCache(
+                    "slstm", sls=xlstm_lib.init_slstm_state(cfg, batch)))
+        return caches
+    windows = layer_windows(cfg)
+    for i in range(cfg.num_layers):
+        w = None
+        if windows is not None:
+            wi = int(windows[i])
+            w = None if wi >= BIG_WINDOW else wi
+        kv = init_kv_cache(cfg, batch, max_len, window=w)
+        if cfg.family == "hybrid":
+            caches.append(LayerCache(
+                "hybrid", kv=kv, ssm=ssm_lib.init_ssm_state(cfg, batch)))
+        else:
+            caches.append(LayerCache("attn", kv=kv))
+    return caches
+
+
+def decode_step(params: Params, caches: Any, tokens: jnp.ndarray,
+                cfg: ModelConfig, moe_mode: Optional[str] = None
+                ) -> Tuple[jnp.ndarray, Any]:
+    """tokens: [B] -> (logits [B, V], caches').
+
+    StackedKV caches take the scanned path; heterogeneous list caches
+    (hybrid / ssm) loop over layers."""
+    if isinstance(caches, StackedKV):
+        return decode_step_scanned(params, caches, tokens, cfg,
+                                   moe_mode=moe_mode)
+    x = embed_tokens(params["embed"], tokens[:, None], cfg)
+    new_caches: List[Any] = []
+    if cfg.family == "ssm":
+        x = _xlstm_decode(params["xlstm"], x, cfg, caches, new_caches)
+    else:
+        for i in range(cfg.num_layers):
+            bp = jax.tree.map(lambda l: l[i], params["blocks"])
+            c = caches[i]
+            aux = None
+            h = apply_norm(cfg, bp["norm1"], x)
+            if cfg.family == "hybrid":
+                a, kv = attn_lib.decode_attention(bp["attn"], h, c.kv, cfg)
+                sout, sst = ssm_lib.ssm_block(bp["ssm"], h, cfg, state=c.ssm)
+                a = apply_norm(cfg, bp["norm_a"], a)
+                sout = apply_norm(cfg, bp["norm_s"], sout)
+                x = x + 0.5 * (a + sout)
+                new_caches.append(LayerCache("hybrid", kv=kv, ssm=sst))
+            else:
+                a, kv = attn_lib.decode_attention(bp["attn"], h, c.kv, cfg)
+                x = x + a
+                new_caches.append(LayerCache("attn", kv=kv))
+            h = apply_norm(cfg, bp["norm2"], x)
+            if cfg.family == "moe":
+                y, _ = moe_lib.moe_ffn(bp["moe"], h, cfg, mode=moe_mode)
+            else:
+                y = apply_mlp(bp["mlp"], h, cfg)
+            x = x + y
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(params["embed"], x, cfg)
+    return logits[:, 0], new_caches
+
+
+def _xlstm_decode(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                  caches: List[Any], new_caches: List[Any]) -> jnp.ndarray:
+    m_per, units = _xlstm_unit_shape(cfg)
+    ci = 0
+    for u in range(max(units, 1)):
+        n_m = m_per if units else cfg.num_layers
+        for i in range(n_m):
+            bp = jax.tree.map(
+                lambda l: (l[u, i] if units else l[i]), p["m_blocks"])
+            h = apply_norm(cfg, bp["norm"], x)
+            y, st = xlstm_lib.mlstm_block(bp["core"], h, cfg,
+                                          state=caches[ci].mls)
+            x = x + y
+            new_caches.append(LayerCache("mlstm", mls=st))
+            ci += 1
+        if units:
+            bp = jax.tree.map(lambda l: l[u], p["s_blocks"])
+            h = apply_norm(cfg, bp["norm"], x)
+            y, st = xlstm_lib.slstm_block(bp["core"], h, cfg,
+                                          state=caches[ci].sls)
+            x = x + y
+            new_caches.append(LayerCache("slstm", sls=st))
+            ci += 1
+    return x
+
+
+def prefill(params: Params, tokens: jnp.ndarray, cfg: ModelConfig,
+            max_len: Optional[int] = None,
+            patch_embeds: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, List[Any]]:
+    """Run the full prompt, returning (logits [B, S, V], filled caches)."""
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = embed_tokens(params["embed"], tokens, cfg)
+    if patch_embeds is not None:
+        pe = patch_embeds.astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+        s = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    if cfg.family == "ssm":
+        return prefill_ssm(params, tokens, cfg)
+    if cfg.family in ("dense", "moe", "vlm"):
+        return prefill_scanned(params, tokens, cfg, max_len,
+                               patch_embeds=patch_embeds)
+    caches: List[Any] = []
+    windows = layer_windows(cfg)
+    for i in range(cfg.num_layers):
+        bp = jax.tree.map(lambda l: l[i], params["blocks"])
+        w = None
+        wi_static = None
+        if windows is not None:
+            wi_static = int(windows[i])
+            w = None if wi_static >= BIG_WINDOW else wi_static
+        h = apply_norm(cfg, bp["norm1"], x)
+        q, k, v = attn_lib._project_qkv(bp["attn"], h, positions, cfg)
+        qt, kt, vt = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+        o = attn_lib.full_attention(qt, kt, vt, causal=True, window=w,
+                                    impl=attn_lib.resolve_impl(cfg, s),
+                                    chunk=cfg.attn_chunk)
+        a = jnp.einsum("bshk,hkd->bsd", o.transpose(0, 2, 1, 3),
+                       bp["attn"]["wo"])
+        kv = _fill_kv_cache(cfg, kt, vt, w, max_len, s)
+        if cfg.family == "hybrid":
+            from repro.sharding import active as _active
+            _, _mesh = _active()
+            if cfg.ssm_cp and _mesh is not None and \
+                    _mesh.shape.get("model", 1) > 1 and \
+                    s % int(_mesh.shape["model"]) == 0:
+                from repro.models.ssm_cp import ssm_block_context_parallel
+                sout = ssm_block_context_parallel(
+                    bp["ssm"], h, cfg, _mesh,
+                    batch_axes=tuple(a for a in ("pod", "data")
+                                     if a in _mesh.shape))
+                sst = ssm_lib.init_ssm_state(cfg, b)  # stateless prefill
+            else:
+                sout, sst = ssm_lib.ssm_block(
+                    bp["ssm"], h, cfg,
+                    state=ssm_lib.init_ssm_state(cfg, b))
+            a2 = apply_norm(cfg, bp["norm_a"], a)
+            s2 = apply_norm(cfg, bp["norm_s"], sout)
+            x = x + 0.5 * (a2 + s2)
+            caches.append(LayerCache("hybrid", kv=kv, ssm=sst))
+        else:
+            x = x + a
+            caches.append(LayerCache("attn", kv=kv))
+        h = apply_norm(cfg, bp["norm2"], x)
+        if cfg.family == "moe":
+            y, _ = moe_lib.moe_ffn(bp["moe"], h, cfg)
+        else:
+            y = apply_mlp(bp["mlp"], h, cfg)
+        x = x + y
+    x = apply_norm(cfg, params["final_norm"], x)
+    return unembed(params["embed"], x, cfg), caches
+
+
+def _fill_kv_cache(cfg: ModelConfig, kt, vt, window, max_len, s) -> KVCache:
+    b = kt.shape[0]
+    size = min(window, max_len) if window else max_len
+    kc = jnp.zeros((b, cfg.num_kv_heads, size, cfg.hd), kt.dtype)
+    vc = jnp.zeros_like(kc)
+    if window:
+        take = min(window, s)
+        # ring layout: position p lives at slot p % size
+        src = kt[:, :, s - take:s]
+        slots = (jnp.arange(s - take, s)) % size
+        kc = kc.at[:, :, slots].set(src)
+        vc = vc.at[:, :, slots].set(vt[:, :, s - take:s])
+    else:
+        kc = jax.lax.dynamic_update_slice(kc, kt, (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, vt, (0, 0, 0, 0))
+    return KVCache(k=kc, v=vc, pos=jnp.asarray(s, jnp.int32),
+                   window=window or 0)
+
+
+def prefill_ssm(params: Params, tokens: jnp.ndarray, cfg: ModelConfig
+                ) -> Tuple[jnp.ndarray, List[Any]]:
+    """xLSTM prefill: run blocks statefully, collecting final states."""
+    b, s = tokens.shape
+    x = embed_tokens(params["embed"], tokens, cfg)
+    caches: List[Any] = []
+    m_per, units = _xlstm_unit_shape(cfg)
+    p = params["xlstm"]
+    for u in range(max(units, 1)):
+        n_m = m_per if units else cfg.num_layers
+        for i in range(n_m):
+            bp = jax.tree.map(
+                lambda l: (l[u, i] if units else l[i]), p["m_blocks"])
+            h = apply_norm(cfg, bp["norm"], x)
+            y, st = xlstm_lib.mlstm_block(
+                bp["core"], h, cfg, state=xlstm_lib.init_mlstm_state(cfg, b))
+            x = x + y
+            caches.append(LayerCache("mlstm", mls=st))
+        if units:
+            bp = jax.tree.map(lambda l: l[u], p["s_blocks"])
+            h = apply_norm(cfg, bp["norm"], x)
+            y, st = xlstm_lib.slstm_block(
+                bp["core"], h, cfg, state=xlstm_lib.init_slstm_state(cfg, b))
+            x = x + y
+            caches.append(LayerCache("slstm", sls=st))
+    x = apply_norm(cfg, params["final_norm"], x)
+    return unembed(params["embed"], x, cfg), caches

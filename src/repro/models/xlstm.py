@@ -1,0 +1,237 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) + sLSTM (scalar
+memory, sequential) — arXiv:2405.04517, adapted to TPU.
+
+mLSTM recurrence per head (state C [hd, hd], n [hd], stabilizer m):
+    f_t = sigmoid(f̃_t)   i_t = exp(ĩ_t)        (exponential input gate)
+    m_t = max(log f_t + m_{t-1}, log i_t)
+    C_t = f'_t C_{t-1} + i'_t v_t k_t^T         (gates rescaled by m_t)
+    n_t = f'_t n_{t-1} + i'_t k_t
+    y_t = (C_t q_t) / max(|n_t . q_t|, 1)
+Train/prefill evaluates it *chunkwise*: stabilized parallel form within a
+chunk, tiny (C, n, m) carry across chunks via lax.scan — same pattern as
+ssm.py, O(chunk) memory, O(1) decode.
+
+sLSTM heads keep true sequential recurrence (R_* recurrent weights) — they
+are the non-parallelizable part of the paper; the 7:1 m:s layer pattern is
+expressed as scanned units of (slstm_every - 1) mLSTM blocks + 1 sLSTM
+block so the whole 48-layer stack is still two nested scans.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, trunc_normal
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig) -> Params:
+    d, H = cfg.d_model, cfg.num_heads
+    hd = d // H
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 6)
+    return {"wq": trunc_normal(ks[0], (d, H, hd), dt),
+            "wk": trunc_normal(ks[1], (d, H, hd), dt),
+            "wv": trunc_normal(ks[2], (d, H, hd), dt),
+            "wi": trunc_normal(ks[3], (d, H), jnp.float32),
+            "wf": trunc_normal(ks[4], (d, H), jnp.float32),
+            "f_bias": jnp.full((H,), 3.0, jnp.float32),
+            "wo": trunc_normal(ks[5], (H, hd, d), dt)}
+
+
+def mlstm_logical_axes(cfg: ModelConfig) -> Params:
+    return {"wq": ("embed", "heads", "hd"), "wk": ("embed", "heads", "hd"),
+            "wv": ("embed", "heads", "hd"), "wi": ("embed", "heads"),
+            "wf": ("embed", "heads"), "f_bias": ("heads",),
+            "wo": ("heads", "hd", "embed")}
+
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray    # [B, H, hd, hd] f32
+    n: jnp.ndarray    # [B, H, hd] f32
+    m: jnp.ndarray    # [B, H] f32 log-stabilizer
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    return MLSTMState(c=jnp.zeros((batch, H, hd, hd), jnp.float32),
+                      n=jnp.zeros((batch, H, hd), jnp.float32),
+                      m=jnp.full((batch, H), -1e30, jnp.float32))
+
+
+def _mlstm_chunk(q, k, v, logf, logi, state: MLSTMState):
+    """Stabilized chunk-parallel mLSTM.
+
+    q,k,v: [B, H, T, hd] f32; logf, logi: [B, H, T]; returns (y, state')."""
+    b, h, t, hd = q.shape
+    F = jnp.cumsum(logf, axis=-1)                       # log prod f_(1..t)
+    # decay from chunk start to step t (inclusive of f_t)
+    logas = F                                            # state-in decay
+    # pairwise decay D[t, s] = log prod f_(s+1..t) + log i_s,  s <= t
+    D = F[..., :, None] - F[..., None, :] + logi[..., None, :]
+    tri = jnp.tril(jnp.ones((t, t), bool))
+    D = jnp.where(tri, D, -jnp.inf)
+    m_in = state.m[..., None] + logas                    # [B,H,T] carried
+    m_local = jnp.max(D, axis=-1)                        # [B,H,T]
+    m_t = jnp.maximum(m_in, m_local)
+    # intra-chunk contribution
+    w = jnp.exp(D - m_t[..., None])                      # [B,H,T,T]
+    s_qk = jnp.einsum("bhtd,bhsd->bhts", q, k) / (hd ** 0.5)
+    y_intra = jnp.einsum("bhts,bhsd->bhtd", w * s_qk, v)
+    n_intra = jnp.einsum("bhts,bhsd->bhtd", w, k)
+    # inter-chunk (carried state, stored stabilized at state.m) rescale
+    scale_in = jnp.exp(state.m[..., None] + logas - m_t)  # [B,H,T]
+    y_inter = jnp.einsum("bhde,bhte->bhtd", state.c,
+                         q) / (hd ** 0.5)
+    y_inter = y_inter * scale_in[..., None]
+    n_inter = state.n[:, :, None, :] * scale_in[..., None]
+    y_num = y_intra + y_inter
+    n_tot = n_intra + n_inter
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhtd,bhtd->bht", n_tot,
+                                           q) / (hd ** 0.5)),
+                        jnp.exp(-m_t))
+    y = y_num / denom[..., None]
+    # state update to end of chunk
+    loga_T = F[..., -1:]                                 # total chunk decay
+    m_new = jnp.maximum(state.m + loga_T[..., 0],
+                        jnp.max(D[..., -1, :], axis=-1))
+    up_w = jnp.exp(F[..., -1:] - F + logi - m_new[..., None])  # [B,H,T]
+    c_new = (state.c * jnp.exp(state.m + loga_T[..., 0] - m_new
+                               )[..., None, None] +
+             jnp.einsum("bht,bhtd,bhte->bhde", up_w, v, k))
+    n_new = (state.n * jnp.exp(state.m + loga_T[..., 0] - m_new)[..., None]
+             + jnp.einsum("bht,bhtd->bhd", up_w, k))
+    return y, MLSTMState(c=c_new, n=n_new, m=m_new)
+
+
+def mlstm_block(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                state: Optional[MLSTMState] = None
+                ) -> Tuple[jnp.ndarray, Optional[MLSTMState]]:
+    """x: [B, S, d] -> (y [B, S, d], state')."""
+    b, s, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"]).astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"]).astype(jnp.float32)
+    logi = (x.astype(jnp.float32) @ p["wi"]).transpose(0, 2, 1)  # [B,H,S]
+    logf = jax.nn.log_sigmoid(
+        (x.astype(jnp.float32) @ p["wf"]).transpose(0, 2, 1) + p["f_bias"][:, None])
+    st = state if state is not None else init_mlstm_state(cfg, b)
+    chunk = min(cfg.ssm_chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        logi = jnp.pad(logi, ((0, 0), (0, 0), (0, pad)),
+                       constant_values=-1e30)
+        logf = jnp.pad(logf, ((0, 0), (0, 0), (0, pad)))
+    nc = q.shape[2] // chunk
+
+    def split(a):
+        return a.reshape(a.shape[0], a.shape[1], nc, chunk,
+                         *a.shape[3:]).transpose(2, 0, 1, 3,
+                                                 *range(4, a.ndim + 1))
+
+    def step(carry, inp):
+        qc, kc, vc, fc, ic = inp
+        y, new = _mlstm_chunk(qc, kc, vc, fc, ic, carry)
+        return new, y
+
+    final, ys = jax.lax.scan(
+        step, st, (split(q), split(k), split(v), split(logf), split(logi)))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(b, H, nc * chunk, hd)[:, :, :s]
+    y = y.transpose(0, 2, 1, 3).astype(x.dtype)          # [B,S,H,hd]
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"])
+    return out, (final if state is not None else None)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (sequential scalar memory)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig) -> Params:
+    d, H = cfg.d_model, cfg.num_heads
+    hd = d // H
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 10)
+    p = {"wz": trunc_normal(ks[0], (d, H, hd), dt),
+         "wi": trunc_normal(ks[1], (d, H, hd), dt),
+         "wf": trunc_normal(ks[2], (d, H, hd), dt),
+         "wo_g": trunc_normal(ks[3], (d, H, hd), dt),
+         "rz": trunc_normal(ks[4], (H, hd, hd), dt),
+         "ri": trunc_normal(ks[5], (H, hd, hd), dt),
+         "rf": trunc_normal(ks[6], (H, hd, hd), dt),
+         "ro": trunc_normal(ks[7], (H, hd, hd), dt),
+         "f_bias": jnp.full((H, hd), 3.0, jnp.float32),
+         "wout": trunc_normal(ks[8], (H, hd, d), dt)}
+    return p
+
+
+def slstm_logical_axes(cfg: ModelConfig) -> Params:
+    ax3 = ("embed", "heads", "hd")
+    axr = ("heads", "hd", None)
+    return {"wz": ax3, "wi": ax3, "wf": ax3, "wo_g": ax3,
+            "rz": axr, "ri": axr, "rf": axr, "ro": axr,
+            "f_bias": ("heads", "hd"), "wout": ("heads", "hd", "embed")}
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray   # [B, H, hd]
+    n: jnp.ndarray   # [B, H, hd]
+    h: jnp.ndarray   # [B, H, hd]
+    m: jnp.ndarray   # [B, H, hd]
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full_like(z, -1e30))
+
+
+def slstm_block(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                state: Optional[SLSTMState] = None
+                ) -> Tuple[jnp.ndarray, Optional[SLSTMState]]:
+    """Sequential sLSTM: x [B, S, d] -> y [B, S, d] (lax.scan over S)."""
+    b, s, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+    zx = jnp.einsum("bsd,dhk->sbhk", x, p["wz"]).astype(jnp.float32)
+    ix = jnp.einsum("bsd,dhk->sbhk", x, p["wi"]).astype(jnp.float32)
+    fx = jnp.einsum("bsd,dhk->sbhk", x, p["wf"]).astype(jnp.float32)
+    ox = jnp.einsum("bsd,dhk->sbhk", x, p["wo_g"]).astype(jnp.float32)
+    st = state if state is not None else init_slstm_state(cfg, b)
+
+    def recur(h_prev, w):
+        return jnp.einsum("bhk,hkl->bhl", h_prev,
+                          w.astype(jnp.float32))
+
+    def step(carry, inp):
+        zt, it, ft, ot = inp
+        c, n, h, m = carry
+        z = jnp.tanh(zt + recur(h, p["rz"]))
+        logi = it + recur(h, p["ri"])
+        logf = jax.nn.log_sigmoid(ft + recur(h, p["rf"]) + p["f_bias"])
+        o = jax.nn.sigmoid(ot + recur(h, p["ro"]))
+        m_new = jnp.maximum(logf + m, logi)
+        i_p = jnp.exp(logi - m_new)
+        f_p = jnp.exp(logf + m - m_new)
+        c_new = f_p * c + i_p * z
+        n_new = f_p * n + i_p
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return SLSTMState(c=c_new, n=n_new, h=h_new, m=m_new), h_new
+
+    final, hs = jax.lax.scan(step, st, (zx, ix, fx, ox))
+    y = hs.transpose(1, 0, 2, 3).astype(x.dtype)          # [B,S,H,hd]
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wout"])
+    return out, (final if state is not None else None)

@@ -1,0 +1,12 @@
+from repro.optim.adamw import adamw
+from repro.optim.adafactor import adafactor
+from repro.optim.base import Optimizer, apply_updates
+from repro.optim.clip import clip_by_global_norm, global_norm
+from repro.optim.compression import (compress_int8, decompress_int8,
+                                     error_feedback_compress)
+from repro.optim.schedule import constant, cosine_warmup, linear_warmup
+
+__all__ = ["Optimizer", "apply_updates", "adamw", "adafactor",
+           "clip_by_global_norm", "global_norm", "cosine_warmup",
+           "linear_warmup", "constant", "compress_int8", "decompress_int8",
+           "error_feedback_compress"]

@@ -1,0 +1,90 @@
+"""Adafactor (Shazeer & Stern, 2018) — factored second moments.
+
+The memory-frugal optimizer for the 1T-parameter cells: second-moment state
+is O(rows + cols) instead of O(rows * cols), and first moment is optional —
+see EXPERIMENTS.md §Dry-run for the kimi-k2 memory budget this enables.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+class AdafactorState(NamedTuple):
+    v_row: Any          # factored stats ([..., r] rows) or full v for 1-D
+    v_col: Any
+    m: Any              # momentum (empty tuple leaves if disabled)
+    count: jnp.ndarray
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor(decay: float = 0.8, eps1: float = 1e-30, eps2: float = 1e-3,
+              clip_threshold: float = 1.0, momentum: Optional[float] = None,
+              weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        def vrow(p):
+            if _factored(p.shape):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)     # full v
+
+        def vcol(p):
+            if _factored(p.shape):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)        # unused
+
+        m = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params) \
+            if momentum else jax.tree.map(lambda p: jnp.zeros((1,),
+                                                              jnp.float32),
+                                          params)
+        return AdafactorState(v_row=jax.tree.map(vrow, params),
+                              v_col=jax.tree.map(vcol, params),
+                              m=m, count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        c = state.count + 1
+        beta2 = 1.0 - c.astype(jnp.float32) ** (-decay)
+
+        def upd(g, vr, vc, m, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps1
+            if _factored(g.shape):
+                vr2 = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc2 = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+                r = vr2 / jnp.maximum(
+                    jnp.mean(vr2, axis=-1, keepdims=True), eps1)
+                u = gf / (jnp.sqrt(r)[..., None] *
+                          jnp.sqrt(vc2)[..., None, :] + eps1)
+            else:
+                vr2 = beta2 * vr + (1 - beta2) * g2
+                vc2 = vc
+                u = gf / (jnp.sqrt(vr2) + eps1)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + eps1)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            if momentum:
+                m2 = momentum * m + (1 - momentum) * u
+                u = m2
+            else:
+                m2 = m
+            u = u + weight_decay * p.astype(jnp.float32)
+            return -lr * u, vr2, vc2, m2
+
+        out = jax.tree.map(upd, grads, state.v_row, state.v_col, state.m,
+                           params)
+        flat, treedef = jax.tree.flatten(
+            out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 4)
+        pick = lambda i: treedef.unflatten([o[i] for o in flat])  # noqa
+        return pick(0), AdafactorState(v_row=pick(1), v_col=pick(2),
+                                       m=pick(3), count=c)
+
+    return Optimizer(init=init, update=update)
+
+
+def _rms(x):
+    return jnp.sqrt(jnp.mean(x.astype(jnp.float32) ** 2))

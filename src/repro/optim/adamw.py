@@ -1,0 +1,50 @@
+"""AdamW with f32 moments (state shardings follow param shardings)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    count: jnp.ndarray
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return AdamWState(m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params),
+                          count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        c = state.count + 1
+        cf = c.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * gf
+            v2 = b2 * v + (1 - b2) * gf * gf
+            mhat = m2 / (1 - b1 ** cf)
+            vhat = v2 / (1 - b2 ** cf)
+            step = mhat / (jnp.sqrt(vhat) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return -lr * step, m2, v2
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        flat, treedef = jax.tree.flatten(out, is_leaf=lambda x:
+                                         isinstance(x, tuple) and
+                                         len(x) == 3 and
+                                         not isinstance(x, list))
+        ups = treedef.unflatten([o[0] for o in flat])
+        ms = treedef.unflatten([o[1] for o in flat])
+        vs = treedef.unflatten([o[2] for o in flat])
+        return ups, AdamWState(m=ms, v=vs, count=c)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,22 @@
+"""Minimal functional optimizer interface (optax-style, self-contained)."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]                    # params -> state
+    update: Callable[..., Any]                    # (grads, state, params,
+    #                                                lr) -> (updates, state)
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree.map(
+        lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def cast_state(tree: Any, dtype) -> Any:
+    return jax.tree.map(lambda x: x.astype(dtype), tree)

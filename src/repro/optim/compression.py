@@ -1,0 +1,55 @@
+"""Gradient compression (int8 + error feedback) — beyond-paper DP trick.
+
+Before the MaRe tree all-reduce ships gradients between shards, each leaf
+is quantized to int8 with a per-tensor scale; the quantization residual is
+carried in an error-feedback buffer and added to the next step's gradient
+(Seide et al. 2014 / Karimireddy et al. 2019), so the compressed SGD still
+converges.  Cuts the reduce-tree's collective bytes by ~4x for f32 / ~2x
+for bf16 — see EXPERIMENTS.md §Perf for the collective-term arithmetic.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (q int8, scale f32 scalar)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def error_feedback_compress(grads: Any, residual: Any
+                            ) -> Tuple[Any, Any, Any]:
+    """Apply EF int8 compression leaf-wise.
+
+    Returns (quantized leaves (q, scale) tree, dequantized grads to reduce,
+    new residual)."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, s = compress_int8(gf)
+        deq = decompress_int8(q, s)
+        return (q, s), deq, gf - deq
+
+    out = jax.tree.map(one, grads, residual)
+    flat, treedef = jax.tree.flatten(
+        out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
+        and isinstance(x[0], tuple))
+    qs = treedef.unflatten([o[0] for o in flat])
+    deq = treedef.unflatten([o[1] for o in flat])
+    res = treedef.unflatten([o[2] for o in flat])
+    return qs, deq, res
+
+
+def init_residual(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,5 @@
+from repro.sharding.specs import (Rules, active, constrain, data_only_rules,
+                                  make_rules, use_rules)
+
+__all__ = ["Rules", "active", "constrain", "data_only_rules", "make_rules",
+           "use_rules"]

@@ -1,0 +1,8 @@
+from repro.train.step import (StepConfig, TrainState, init_train_state,
+                              make_eval_step, make_serve_steps,
+                              make_train_step)
+from repro.train.trainer import FailureInjector, Trainer, TrainerConfig
+
+__all__ = ["StepConfig", "TrainState", "init_train_state", "make_train_step",
+           "make_eval_step", "make_serve_steps", "Trainer", "TrainerConfig",
+           "FailureInjector"]

@@ -1,0 +1,6 @@
+"""Main pytest process stays 1-device (multi-device scenarios run in
+subprocesses via tests/test_distributed.py)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

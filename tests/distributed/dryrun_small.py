@@ -1,0 +1,21 @@
+"""Miniature dry-run: lower+compile train/serve steps on a 2x4 mesh for a
+reduced arch of each family (the full 512-dev dry-run is launch/dryrun.py)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.configs import get_smoke_config
+from repro.launch.dryrun_lib import dry_run_cell
+from repro.configs.shapes import ShapeConfig
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+shape_train = ShapeConfig("tiny_train", "train", 32, 8)
+shape_dec = ShapeConfig("tiny_dec", "decode", 64, 8)
+for arch in ("smollm-135m", "granite-moe-1b-a400m", "hymba-1.5b",
+             "xlstm-1.3b", "whisper-base", "internvl2-1b"):
+    cfg = get_smoke_config(arch).scaled(dtype="float32")
+    r = dry_run_cell(cfg, shape_train, mesh, extract_collectives=False)
+    assert r["flops"] >= 0, arch
+    r2 = dry_run_cell(cfg, shape_dec, mesh, extract_collectives=False)
+    print("OK", arch, f"train_flops={r['flops']:.3g}")
+print("OK dryrun_small")

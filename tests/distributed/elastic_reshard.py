@@ -1,0 +1,28 @@
+"""Checkpoint on an 8-shard mesh, restore onto a 4-shard mesh (elastic)."""
+import os, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from repro.checkpoint import CheckpointManager
+from repro.models import build_model
+from repro.models.common import ModelConfig
+from repro.optim import adamw
+from repro.train import init_train_state
+
+cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                  num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+                  dtype="float32", remat=False)
+model = build_model(cfg)
+state = init_train_state(model, adamw(), jax.random.PRNGKey(0))
+mesh8 = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh4 = jax.make_mesh((4, 2), ("data", "model"),
+                      axis_types=(AxisType.Auto,) * 2)
+with tempfile.TemporaryDirectory() as d:
+    mgr = CheckpointManager(d)
+    mgr.save(1, state, blocking=True)
+    shard = jax.tree.map(lambda _: NamedSharding(mesh4, P()), state)
+    restored = mgr.restore(state, shardings=shard)
+    ok = jax.tree.all(jax.tree.map(
+        lambda a, b: bool(jnp.all(a == b)), state.params, restored.params))
+    assert ok
+print("OK elastic_reshard")

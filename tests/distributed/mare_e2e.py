@@ -1,0 +1,39 @@
+"""8-device MaRe end-to-end: GC count (Listing 1), topk reduce depths,
+repartition_by colocation + multiset preservation."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import MaRe, TextFile
+
+rng = np.random.default_rng(0)
+dna = rng.integers(0, 4, size=1000).astype(np.int32)
+true_gc = int(np.sum((dna == 2) | (dna == 3)))
+out = (MaRe((dna,))
+       .map(inputMountPoint=TextFile("/dna"), outputMountPoint=TextFile("/count"),
+            image="ubuntu", command="grep-count 2 3")
+       .reduce(inputMountPoint=TextFile("/counts"), outputMountPoint=TextFile("/sum"),
+               image="ubuntu", command="awk-sum"))
+res = out.collect_first_shard()
+assert int(res[0][0]) == true_gc, (res, true_gc)
+
+scores = rng.normal(size=500).astype(np.float32)
+payload = np.arange(500, dtype=np.int32)
+true_top = set(np.argsort(-scores)[:30].tolist())
+for depth in (1, 2, 3):
+    r = MaRe((scores, payload)).reduce(image="toolbox/topk", k=30, depth=depth)
+    _, p_out = r.collect_first_shard()
+    assert set(p_out.tolist()) == true_top, depth
+
+vals = np.arange(64, dtype=np.int32)
+m3 = MaRe((vals,)).repartition_by(lambda recs: recs[0] % 5)
+got = m3.collect()
+assert sorted(got[0].tolist()) == sorted(vals.tolist())
+ds = m3.dataset
+counts = jax.device_get(ds.counts); recs = jax.device_get(ds.records[0])
+cap = ds.capacity
+keysets = [set((recs[s*cap:s*cap+counts[s]] % 5).tolist())
+           for s in range(ds.num_shards)]
+for i in range(len(keysets)):
+    for j in range(i + 1, len(keysets)):
+        assert not (keysets[i] & keysets[j])
+print("OK mare_e2e")

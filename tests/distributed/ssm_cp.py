@@ -1,0 +1,24 @@
+"""Context-parallel SSM == unsharded ssm_block (seq sharded over 8)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from repro.models.common import ModelConfig
+from repro.models import ssm as ssm_lib
+from repro.models.ssm_cp import ssm_block_context_parallel
+
+cfg = ModelConfig(name="t", family="hybrid", num_layers=1, d_model=32,
+                  num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+                  ssm_state=8, ssm_chunk=8, dtype="float32", remat=False)
+p = ssm_lib.init_ssm(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(size=(2, 64, 32)), jnp.float32)
+y_ref, _ = ssm_lib.ssm_block(p, x, cfg)
+mesh = jax.make_mesh((1, 8), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+xs = jax.device_put(x, NamedSharding(mesh, P(None, "model", None)))
+y_cp = jax.jit(lambda x: ssm_block_context_parallel(
+    p, x, cfg, mesh, batch_axes=None))(xs)
+err = float(jnp.max(jnp.abs(y_ref - y_cp)))
+assert err < 1e-4, err
+print("OK ssm_cp err", err)

@@ -1,0 +1,105 @@
+"""Core MaRe semantics on a single device (shard count 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (MaRe, TextFile, BinaryFiles, RecordMount,
+                        FileSetMount, from_host, collect, pull,
+                        split_factors)
+from repro.core.container import make_partition
+from repro.core.tree_reduce import collective_bytes_tree
+
+
+def test_gc_count_single_device():
+    rng = np.random.default_rng(0)
+    dna = rng.integers(0, 4, size=333).astype(np.int32)
+    true_gc = int(np.sum((dna == 2) | (dna == 3)))
+    out = (MaRe((dna,))
+           .map(inputMountPoint=TextFile("/dna"),
+                outputMountPoint=TextFile("/count"),
+                image="ubuntu", command="grep-count 2 3")
+           .reduce(inputMountPoint=TextFile("/counts"),
+                   outputMountPoint=TextFile("/sum"),
+                   image="ubuntu", command="awk-sum"))
+    assert int(out.collect_first_shard()[0][0]) == true_gc
+
+
+def test_map_is_lazy_and_fused():
+    m = MaRe((np.arange(10, dtype=np.int32),))
+    m2 = m.map(image="toolbox/concat").map(image="toolbox/concat")
+    assert len(m2.plan.ops) == 2          # fused into one pending stage
+    got = m2.collect()
+    assert sorted(got[0].tolist()) == list(range(10))
+
+
+def test_reduce_requires_assoc_commutative():
+    from repro.core.container import ContainerOp, Partition
+
+    def not_ac(part, **kw):
+        return part
+
+    op = ContainerOp(image="bad", fn=not_ac)
+    with pytest.raises(ValueError, match="associative"):
+        MaRe((np.arange(4, dtype=np.int32),)).reduce(op=op)
+
+
+def test_dataset_roundtrip_uneven():
+    data = (np.arange(7, dtype=np.int32),
+            np.arange(14, dtype=np.float32).reshape(7, 2))
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    ds = from_host(data, mesh)
+    got = collect(ds)
+    np.testing.assert_array_equal(got[0], data[0])
+    np.testing.assert_array_equal(got[1], data[1])
+
+
+def test_mount_validation():
+    rm = RecordMount("/x", dtype=jnp.int32)
+    rm.validate((jnp.zeros((3,), jnp.int32),))
+    with pytest.raises(ValueError, match="dtype"):
+        rm.validate((jnp.zeros((3,), jnp.float32),))
+    fm = FileSetMount("/y", keys=("a",))
+    fm.validate({"a": jnp.zeros((2,))})
+    with pytest.raises(ValueError, match="missing"):
+        fm.validate({"b": jnp.zeros((2,))})
+    with pytest.raises(ValueError, match="dict"):
+        fm.validate((jnp.zeros((2,)),))
+
+
+def test_registry_pull_unknown():
+    with pytest.raises(KeyError, match="not found"):
+        pull("no/such/image")
+
+
+def test_split_factors():
+    assert split_factors(16, 2) == [4, 4]
+    assert split_factors(16, 4) == [2, 2, 2, 2]
+    assert split_factors(8, 2) == [2, 4]
+    assert split_factors(1, 2) == [1, 1]
+    for n in (2, 6, 12, 16, 64, 256):
+        for k in (1, 2, 3):
+            f = split_factors(n, k)
+            assert len(f) == k
+            p = 1
+            for x in f:
+                p *= x
+            assert p == n
+
+
+def test_collective_bytes_tree_monotone():
+    """Deeper trees never ship more bytes per level-sum than depth-1
+    (the paper's motivation for K>1 when partitions are large)."""
+    b1 = collective_bytes_tree(1000, 16, depth=1)
+    b2 = collective_bytes_tree(1000, 16, depth=2)
+    assert b2 <= b1
+
+
+def test_topk_image_masks_invalid():
+    op = pull("toolbox/topk", k=3)
+    recs = (jnp.asarray([5.0, 4.0, 3.0, 99.0, 98.0]),
+            jnp.arange(5, dtype=jnp.int32))
+    part = make_partition(recs, 3)    # only first 3 valid
+    out = op(part)
+    assert set(np.asarray(out.records[1])[:3].tolist()) == {0, 1, 2}

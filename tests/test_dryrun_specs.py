@@ -1,0 +1,44 @@
+"""input_specs / rules_for coverage for every assigned cell (no
+compilation — structural checks only)."""
+import jax
+import pytest
+
+from repro.configs import (ARCH_IDS, cells, get_config, get_shape,
+                           shape_skip_reason)
+from repro.launch.dryrun_lib import input_specs, rules_for
+from repro.configs.shapes import SHAPES
+
+
+def test_cell_count_and_skips():
+    all_cells = cells(include_skipped=True)
+    assert len(all_cells) == 40                      # 10 archs x 4 shapes
+    runnable = [c for c in all_cells if c[2] is None]
+    assert len(runnable) == 32                       # 8 long_500k skips
+    skipped = [c for c in all_cells if c[2] is not None]
+    assert {a for a, _, _ in skipped} == {
+        "kimi-k2-1t-a32b", "granite-moe-1b-a400m", "phi3-mini-3.8b",
+        "deepseek-67b", "smollm-135m", "llama3.2-1b", "whisper-base",
+        "internvl2-1b"}
+    assert all(s == "long_500k" for _, s, _ in skipped)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_cover_all_model_inputs(arch):
+    cfg = get_config(arch)
+    for shape in SHAPES:
+        if shape_skip_reason(cfg, shape):
+            continue
+        specs = input_specs(cfg, shape)
+        assert "tokens" in specs
+        if shape.kind == "train":
+            assert "labels" in specs
+            assert specs["tokens"].shape[0] == shape.global_batch
+        if shape.is_decode:
+            assert specs["tokens"].shape == (shape.global_batch,)
+        if cfg.family == "vlm" and shape.kind in ("train", "prefill"):
+            assert "patch_embeds" in specs
+            # patches + text == assigned seq_len
+            assert (specs["patch_embeds"].shape[1] +
+                    specs["tokens"].shape[1]) == shape.seq_len
+        if cfg.family == "audio" and shape.kind == "train":
+            assert specs["frames"].shape[1] == cfg.encoder_seq

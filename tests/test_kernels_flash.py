@@ -1,0 +1,44 @@
+"""Flash-attention kernel vs pure-jnp oracle: shape/dtype sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import attention_ref, flash_attention
+
+RNG = np.random.default_rng(0)
+
+CASES = [
+    # (b, hq, hkv, sq, sk, d, causal, window)
+    (2, 4, 2, 64, 64, 32, True, None),
+    (1, 8, 2, 40, 40, 64, False, None),
+    (1, 4, 4, 96, 96, 32, True, 32),
+    (1, 2, 1, 16, 128, 32, True, None),    # cross lengths (right-aligned)
+    (1, 3, 1, 33, 77, 16, True, None),     # unaligned everything
+    (2, 2, 2, 128, 128, 128, True, None),  # MXU-aligned
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 2e-2)])
+def test_flash_vs_ref(case, dtype, tol):
+    b, hq, hkv, sq, sk, d, causal, window = case
+    q = jnp.asarray(RNG.normal(size=(b, hq, sq, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, hkv, sk, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, hkv, sk, d)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=32, block_k=32, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    err = float(jnp.max(jnp.abs((out - ref).astype(jnp.float32))))
+    assert err < tol, (case, dtype, err)
+
+
+def test_block_sizes():
+    q = jnp.asarray(RNG.normal(size=(1, 2, 64, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 1, 64, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 1, 64, 32)), jnp.float32)
+    ref = attention_ref(q, k, v, causal=True)
+    for bq, bk in [(8, 8), (16, 64), (64, 16), (128, 128)]:
+        out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                              interpret=True)
+        assert float(jnp.max(jnp.abs(out - ref))) < 2e-5, (bq, bk)

@@ -1,0 +1,21 @@
+"""Fused RMSNorm kernel vs oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import rmsnorm, rmsnorm_ref
+
+RNG = np.random.default_rng(2)
+
+
+@pytest.mark.parametrize("shape", [(128, 256), (33, 100), (4, 8, 64),
+                                   (1, 512), (256, 128)])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-6),
+                                       (jnp.bfloat16, 2e-2)])
+def test_rmsnorm_vs_ref(shape, dtype, tol):
+    x = jnp.asarray(RNG.normal(size=shape), dtype)
+    w = jnp.asarray(RNG.normal(size=shape[-1]), dtype)
+    out = rmsnorm(x, w, block_rows=32, interpret=True)
+    ref = rmsnorm_ref(x, w)
+    err = float(jnp.max(jnp.abs((out - ref).astype(jnp.float32))))
+    assert err < tol, (shape, dtype, err)

@@ -1,0 +1,27 @@
+"""Streaming top-k kernel vs lax.top_k oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import topk_ref, topk_reduce
+
+RNG = np.random.default_rng(1)
+
+
+@pytest.mark.parametrize("n,k,vc,block", [
+    (1000, 30, 1000, 128), (257, 10, 200, 64), (64, 5, 64, 8),
+    (4096, 50, 4000, 1024), (100, 100, 100, 32),
+])
+def test_topk_vs_ref(n, k, vc, block):
+    s = jnp.asarray(RNG.normal(size=n), jnp.float32)
+    v, i = topk_reduce(s, k, jnp.int32(vc), block=block, interpret=True)
+    rv, ri = topk_ref(s, k, vc)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(rv), rtol=1e-6)
+    assert set(np.asarray(i).tolist()) == set(np.asarray(ri).tolist())
+
+
+def test_topk_with_duplicates():
+    s = jnp.asarray(np.repeat([3.0, 1.0, 2.0], 30), jnp.float32)
+    v, i = topk_reduce(s, 5, block=16, interpret=True)
+    assert np.allclose(np.asarray(v), 3.0)
+    assert len(set(np.asarray(i).tolist())) == 5  # distinct indices

@@ -1,0 +1,84 @@
+"""Per-arch smoke tests (assignment deliverable f): every assigned
+architecture instantiates a REDUCED config of the same family and runs one
+forward + one train step on CPU, asserting output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import build_model
+from repro.models.common import param_count_analytic
+from repro.optim import adamw
+from repro.optim.schedule import constant
+from repro.train import StepConfig, init_train_state, make_train_step
+
+RNG = np.random.default_rng(0)
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, b=2, s=16):
+    batch = {"tokens": jnp.asarray(
+        RNG.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+    batch["labels"] = jnp.asarray(
+        RNG.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            RNG.normal(size=(b, cfg.encoder_seq, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "vlm" and cfg.num_patches:
+        batch["patch_embeds"] = jnp.asarray(
+            RNG.normal(size=(b, cfg.num_patches, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.family == get_config(arch).family
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = make_batch(cfg)
+    logits = jax.jit(model.forward)(params, batch)
+    b, s = batch["tokens"].shape
+    expect_s = s + (cfg.num_patches if cfg.family == "vlm" else 0)
+    assert logits.shape == (b, expect_s, cfg.vocab_size), arch
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    opt = adamw()
+    state = init_train_state(model, opt, KEY)
+    step = jax.jit(make_train_step(model, opt, constant(1e-3),
+                                   StepConfig()))
+    state2, metrics = step(state, make_batch(cfg))
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert np.isfinite(float(metrics["grad_norm"])), arch
+    assert int(state2.step) == 1
+    # params actually changed
+    moved = any(bool(jnp.any(a != b)) for a, b in zip(
+        jax.tree.leaves(state.params), jax.tree.leaves(state2.params)))
+    assert moved, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_param_count_scale(arch):
+    """Full configs land within a sane band of their advertised scale."""
+    cfg = get_config(arch)
+    n = param_count_analytic(cfg)
+    bands = {"kimi-k2-1t-a32b": (0.8e12, 1.3e12),
+             "granite-moe-1b-a400m": (0.7e9, 1.6e9),
+             "phi3-mini-3.8b": (3.0e9, 4.6e9),
+             "deepseek-67b": (55e9, 75e9),
+             "smollm-135m": (0.1e9, 0.17e9),
+             "llama3.2-1b": (0.9e9, 1.6e9),
+             "whisper-base": (0.05e9, 0.11e9),
+             "hymba-1.5b": (1.0e9, 2.2e9),
+             "internvl2-1b": (0.4e9, 1.0e9),
+             "xlstm-1.3b": (0.7e9, 1.8e9)}
+    lo, hi = bands[arch]
+    assert lo <= n <= hi, (arch, n)

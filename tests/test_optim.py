@@ -1,0 +1,78 @@
+"""Optimizers, schedules, clipping, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (adafactor, adamw, apply_updates,
+                         clip_by_global_norm, cosine_warmup, global_norm,
+                         linear_warmup)
+from repro.optim.compression import error_feedback_compress, init_residual
+
+
+def _quad_problem():
+    params = {"w": jnp.asarray([1.0, -2.0, 3.0]),
+              "b": jnp.asarray([[0.5, 0.5], [1.0, -1.0]])}
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+    return params, loss
+
+
+def test_adamw_converges():
+    params, loss = _quad_problem()
+    opt = adamw(weight_decay=0.0)
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        up, state = opt.update(g, state, params, 0.05)
+        params = apply_updates(params, up)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adafactor_converges_and_is_factored():
+    params, loss = _quad_problem()
+    opt = adafactor()
+    state = opt.init(params)
+    # factored second moment: 2-D leaf stores row+col, not full
+    assert state.v_row["b"].shape == (2,)
+    assert state.v_col["b"].shape == (2,)
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        up, state = opt.update(g, state, params, 0.05)
+        params = apply_updates(params, up)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adafactor_memory_is_sublinear():
+    p = {"big": jnp.zeros((128, 256))}
+    st = adafactor().init(p)
+    factored = st.v_row["big"].size + st.v_col["big"].size
+    assert factored == 128 + 256          # not 128*256
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert abs(float(norm) - 20.0) < 1e-4
+    # below threshold: untouched
+    tree2 = {"a": jnp.full((4,), 0.1)}
+    clipped2, _ = clip_by_global_norm(tree2, 1.0)
+    np.testing.assert_allclose(np.asarray(clipped2["a"]), 0.1, rtol=1e-6)
+
+
+def test_schedules():
+    lw = linear_warmup(1.0, 10)
+    assert float(lw(jnp.int32(0))) < 0.2
+    assert abs(float(lw(jnp.int32(100))) - 1.0) < 1e-6
+    cw = cosine_warmup(1.0, 10, 100, min_ratio=0.1)
+    assert float(cw(jnp.int32(99))) <= float(cw(jnp.int32(50)))
+    assert float(cw(jnp.int32(9999))) >= 0.099
+
+
+def test_error_feedback_carries_residual():
+    grads = {"w": jnp.asarray([1.0, 1e-4, -1.0])}
+    res = init_residual(grads)
+    _, deq, res = error_feedback_compress(grads, res)
+    # residual holds what quantization lost; next round recovers it
+    total = jnp.abs(res["w"]) + jnp.abs(deq["w"] - grads["w"])
+    assert float(jnp.max(jnp.abs(deq["w"] + res["w"] - grads["w"]))) < 1e-6

@@ -1,0 +1,102 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.shuffle import _pack_by_dest, hash_keys
+from repro.core.tree_reduce import split_factors
+from repro.optim.compression import compress_int8, decompress_int8
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+@given(st.integers(1, 512), st.integers(1, 5))
+@settings(**SETTINGS)
+def test_split_factors_product(n, k):
+    f = split_factors(n, k)
+    assert len(f) == k
+    p = 1
+    for x in f:
+        p *= x
+    assert p == n
+
+
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=64),
+       st.integers(2, 8))
+@settings(**SETTINGS)
+def test_pack_by_dest_preserves_multiset(keys, ndest):
+    """repartitionBy invariant: with capacity == n_records the pack step
+    is lossless and every record lands in its hashed destination."""
+    keys_a = jnp.asarray(keys, jnp.int32)
+    n = len(keys)
+    recs = (jnp.arange(n, dtype=jnp.int32),)
+    dest = (hash_keys(keys_a) % ndest).astype(jnp.int32)
+    valid = jnp.ones((n,), bool)
+    pack = _pack_by_dest(recs, dest, valid, ndest, n)
+    assert int(pack.dropped) == 0
+    (vals,) = pack.buffer
+    counts = pack.counts
+    got = []
+    cn = np.asarray(counts)
+    for d in range(ndest):
+        got += np.asarray(vals[d, :cn[d]]).tolist()
+        # each packed record's key must hash to d
+        for r in np.asarray(vals[d, :cn[d]]).tolist():
+            assert int(hash_keys(keys_a[r]) % ndest) == d
+    assert sorted(got) == list(range(n))
+
+
+@given(st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=32))
+@settings(**SETTINGS)
+def test_hash_keys_deterministic(keys):
+    a = hash_keys(jnp.asarray(keys, jnp.int32))
+    b = hash_keys(jnp.asarray(keys, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1,
+                max_size=128))
+@settings(**SETTINGS)
+def test_int8_compression_error_bound(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q, s = compress_int8(x)
+    deq = decompress_int8(q, s)
+    # error bounded by half a quantization step
+    amax = float(jnp.max(jnp.abs(x)))
+    assert float(jnp.max(jnp.abs(deq - x))) <= max(amax / 127.0, 1e-9)
+
+
+@given(st.integers(0, 100), st.integers(1, 30), st.integers(2, 5))
+@settings(**SETTINGS)
+def test_mare_reduce_depth_invariance(seed, n, k):
+    """Paper §1.2.2: for associative+commutative combiners the reduce
+    result is independent of tree depth K (single shard: exercise the
+    local pre-combine + identity tree)."""
+    from repro.core import MaRe
+    rng = np.random.default_rng(seed)
+    scores = rng.normal(size=n).astype(np.float32)
+    want = set(np.argsort(-scores)[:min(5, n)].tolist())
+    results = []
+    for depth in (1, k):
+        r = MaRe((scores, np.arange(n, dtype=np.int32))).reduce(
+            image="toolbox/topk", k=5, depth=depth)
+        _, idx = r.collect_first_shard()
+        results.append(set(idx.tolist()))
+    assert results[0] == results[1] == want
+
+
+@given(st.lists(st.integers(0, 6), min_size=1, max_size=48),
+       st.integers(2, 6))
+@settings(**SETTINGS)
+def test_pack_unpack_roundtrip(dests, ndest):
+    """unpack_gather(pack(x)) returns each record's own row (or zeros if
+    dropped) — the MoE dispatch invariant."""
+    from repro.core.shuffle import unpack_gather
+    n = len(dests)
+    recs = jnp.arange(n * 2, dtype=jnp.float32).reshape(n, 2)
+    dest = jnp.asarray([d % ndest for d in dests], jnp.int32)
+    pack = _pack_by_dest((recs,), dest, jnp.ones((n,), bool), ndest, n)
+    flat = pack.buffer[0].reshape(ndest * n, 2)
+    back = unpack_gather(flat, pack, n)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(recs))

@@ -1,0 +1,38 @@
+"""Logical-axis rules: divisibility-safe TP and axis-reuse refusal."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import Rules, data_only_rules, make_rules
+
+
+def _mesh_shape():
+    return {"data": 4, "model": 2}
+
+
+def test_divisible_dims_shard():
+    r = Rules(table={"heads": "model", "embed": "data"},
+              mesh_shape=_mesh_shape())
+    spec = r.spec_for(("embed", "heads"), dims=(8, 6))
+    assert spec == P("data", "model")
+
+
+def test_indivisible_dims_replicate():
+    r = Rules(table={"heads": "model"}, mesh_shape=_mesh_shape())
+    # 25 heads never shard over a 2-way axis -> replicated
+    assert r.spec_for(("heads",), dims=(25,)) == P(None)
+    assert r.spec_for(("heads",), dims=(26,)) == P("model")
+
+
+def test_mesh_axis_used_once():
+    r = Rules(table={"a": "model", "b": "model"},
+              mesh_shape=_mesh_shape())
+    spec = r.spec_for(("a", "b"), dims=(4, 4))
+    assert spec == P("model", None)       # second use dropped
+
+
+def test_tuple_axes():
+    r = Rules(table={"batch": ("data", "model")},
+              mesh_shape=_mesh_shape())
+    assert r.spec_for(("batch",), dims=(8,)) == P(("data", "model"))
+    assert r.spec_for(("batch",), dims=(6,)) == P(None)  # 6 % 8 != 0
