@@ -31,6 +31,8 @@ from jax.sharding import PartitionSpec as P    # noqa: E402
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
+from repro import compat                       # noqa: E402
+
 from benchmarks.apps import (_register_once, make_library,     # noqa: E402
                              snp_calling, virtual_screening)
 from repro.launch.hlo_cost import analyze                      # noqa: E402
@@ -54,8 +56,7 @@ from repro.core import MaRe, from_host                          # noqa
 from repro.core.plan import Plan                                # noqa
 
 _register_once()
-mesh = jax.make_mesh((n,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((n,), ("data",))
 ds = from_host(lib, mesh)
 
 if args.app == "vs":
@@ -74,7 +75,7 @@ if args.app == "vs":
         part = tree_reduce_partition(part, topk, "data", n, depth=2)
         return part.records, part.count[None]
 
-    low = jax.jit(jax.shard_map(stage, mesh=mesh,
+    low = jax.jit(compat.shard_map(stage, mesh=mesh,
                                 in_specs=(P("data"), P("data")),
                                 out_specs=(P("data"), P("data")))
                   ).lower(ds.records, ds.counts)
@@ -100,7 +101,7 @@ else:
         part = tree_reduce_partition(part, concat, "data", n, depth=2)
         return part.records, part.count[None]
 
-    low = jax.jit(jax.shard_map(stage, mesh=mesh,
+    low = jax.jit(compat.shard_map(stage, mesh=mesh,
                                 in_specs=(P("data"), P("data")),
                                 out_specs=(P("data"), P("data")))
                   ).lower(ds.records, ds.counts)

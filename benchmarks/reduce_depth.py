@@ -17,21 +17,22 @@ WORKER = r'''
 import os, json, sys
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
-from jax.sharding import PartitionSpec as P, AxisType
+from repro import compat
+from jax.sharding import PartitionSpec as P
 sys.path.insert(0, "src")
 from repro.core.tree_reduce import tree_allreduce, fused_allreduce, collective_bytes_tree
 from repro.launch.hlo_cost import analyze
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("data",))
 x = jax.ShapeDtypeStruct((1<<20,), jnp.float32)   # 4 MiB gradient
 rows = []
 for depth in (1, 2, 3):
-    low = jax.jit(jax.shard_map(lambda g: tree_allreduce(g, "data", 8, depth=depth),
+    low = jax.jit(compat.shard_map(lambda g: tree_allreduce(g, "data", 8, depth=depth),
                   mesh=mesh, in_specs=P(), out_specs=P(),
                   check_vma=False)).lower(x)
     w = analyze(low.compile().as_text())
     rows.append({"k": depth, "wire": w["wire_bytes"],
                  "analytic": collective_bytes_tree(x.size*4, 8, depth)})
-low = jax.jit(jax.shard_map(lambda g: fused_allreduce(g, "data"),
+low = jax.jit(compat.shard_map(lambda g: fused_allreduce(g, "data"),
               mesh=mesh, in_specs=P(), out_specs=P(),
                   check_vma=False)).lower(x)
 w = analyze(low.compile().as_text())

@@ -1,32 +1,48 @@
-"""Quickstart: the paper's Listing 1 (GC count), line for line.
+"""Quickstart: the paper's Listing 1 (GC count), line for line — now fed
+from an on-disk FASTA file through the repro.io ingestion subsystem.
 
   PYTHONPATH=src:. python examples/quickstart.py
 
-A DNA sequence is a record stream over {A,T,G,C} (int codes 0..3).  The
-`ubuntu` image's command grammar maps the paper's POSIX pipeline:
-  grep -o '[GC]' /dna | wc -l   ->  grep-count 2 3
+A genome is written as FASTA, ingested via a pluggable storage backend
+(LocalFS here; swap in ``backend="s3"`` for the emulated remote tier), and
+the POSIX pipeline of Listing 1 runs over byte records:
+  grep -o '[GC]' /dna | wc -l   ->  grep-chars GC
   awk '{s+=$1} END {print s}'   ->  awk-sum
 """
 import os
 import sys
+import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
 from repro.core import MaRe, TextFile
+from repro.io import fasta_source
+
+
+def write_genome(path: str, n_bases: int = 100_000, seed: int = 42) -> str:
+    """Write a random ATGC genome as FASTA; return the sequence string."""
+    rng = np.random.default_rng(seed)
+    seq = "".join(np.array(list("ATGC"))[rng.integers(0, 4, size=n_bases)])
+    with open(path, "w") as f:
+        f.write(">chr1 quickstart genome\n")
+        for i in range(0, len(seq), 70):
+            f.write(seq[i:i + 70] + "\n")
+    return seq
 
 
 def main():
-    rng = np.random.default_rng(42)
-    genome = rng.integers(0, 4, size=100_000).astype(np.int32)  # A T G C
+    tmp = tempfile.mkdtemp(prefix="mare_quickstart_")
+    fasta = os.path.join(tmp, "genome.fa")
+    seq = write_genome(fasta)
 
     gc_count = (
-        MaRe((genome,)).map(
+        MaRe.from_source(fasta_source(fasta, split_bytes=1 << 14)).map(
             inputMountPoint=TextFile("/dna"),
             outputMountPoint=TextFile("/count"),
             image="ubuntu",
-            command="grep-count 2 3",
+            command="grep-chars GC",
         ).reduce(
             inputMountPoint=TextFile("/counts"),
             outputMountPoint=TextFile("/sum"),
@@ -35,7 +51,7 @@ def main():
         ))
 
     (total,) = gc_count.collect_first_shard()
-    expected = int(np.sum((genome == 2) | (genome == 3)))
+    expected = seq.count("G") + seq.count("C")
     print(f"GC count: {int(total[0])} (expected {expected})")
     assert int(total[0]) == expected
     print("OK")

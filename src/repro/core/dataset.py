@@ -79,6 +79,59 @@ def from_host(records: Any, mesh: Mesh, axis: str = "data",
                           axis=axis)
 
 
+def from_shard_arrays(shard_records: Any, shard_counts: Sequence[int],
+                      mesh: Mesh, axis: str = "data") -> ShardedDataset:
+    """Assemble a ShardedDataset from per-shard host pytrees.
+
+    ``shard_records`` is an iterable of ``num_shards`` pytrees whose leaves
+    are ``[cap, ...]`` arrays (identical cap/dtype/trailing shape across
+    shards).  Each shard's leaves are ``jax.device_put`` to that shard's
+    device(s) as they arrive — transfers are dispatched asynchronously, so
+    when the iterable packs lazily (repro.io.ingest), the device transfer
+    of shard *s* overlaps host packing of shard *s+1* (double buffering) —
+    then stitched into global arrays without a host-side copy of the full
+    dataset.
+    """
+    n = int(mesh.shape[axis])
+    sharding = NamedSharding(mesh, P(axis))
+    axis_idx = list(mesh.axis_names).index(axis)
+    dev_grid = np.moveaxis(np.asarray(mesh.devices), axis_idx, 0
+                           ).reshape(n, -1)
+
+    treedef = None
+    leaf_shards: List[List[Any]] = []
+    count_shards: List[Any] = []
+    num_seen = 0
+    for s, rec in enumerate(shard_records):
+        leaves, td = jax.tree.flatten(rec)
+        if treedef is None:
+            treedef = td
+            leaf_shards = [[] for _ in leaves]
+        for li, leaf in enumerate(leaves):
+            leaf = np.asarray(leaf)
+            for d in dev_grid[s]:
+                leaf_shards[li].append(jax.device_put(leaf, d))
+        cnt = np.asarray([shard_counts[s]], np.int32)
+        for d in dev_grid[s]:
+            count_shards.append(jax.device_put(cnt, d))
+        num_seen += 1
+    if num_seen != n:
+        raise ValueError(f"got {num_seen} shard pytrees for {n} shards")
+
+    def assemble(arrays, lead, tail):
+        return jax.make_array_from_single_device_arrays(
+            (lead,) + tuple(tail), sharding, arrays)
+
+    out_leaves = []
+    for li, arrays in enumerate(leaf_shards):
+        cap_shape = arrays[0].shape
+        out_leaves.append(assemble(arrays, n * cap_shape[0], cap_shape[1:]))
+    records = jax.tree.unflatten(treedef, out_leaves)
+    counts = assemble(count_shards, n, ())
+    return ShardedDataset(records=records, counts=counts, mesh=mesh,
+                          axis=axis)
+
+
 def collect(ds: ShardedDataset) -> Any:
     """Gather valid records to host (RDD.collect)."""
     counts = np.asarray(jax.device_get(ds.counts))

@@ -36,6 +36,20 @@ def _posix_fn(part: Partition, command: str = "", **kw: Any) -> Partition:
         hit = jnp.isin(tokens, codes) & valid
         total = jnp.sum(hit).astype(jnp.int32)
         return make_partition((total[None],), jnp.int32(1))
+    if prog == "grep-chars":
+        # grep -o '[<chars>]' | wc -l over BYTE records: count occurrences
+        # of any of the given characters inside each record's valid length.
+        # Records: {"data": [cap, width] uint8, "len": [cap] int32}.
+        if len(argv) < 2:
+            raise ValueError("grep-chars needs a character-class argument")
+        codes = jnp.asarray([ord(c) for c in argv[1]], jnp.uint8)
+        data = part.records["data"]
+        lens = part.records["len"]
+        in_len = jnp.arange(data.shape[1])[None, :] < lens[:, None]
+        valid = part.mask()[:, None]
+        hit = jnp.isin(data, codes) & in_len & valid
+        total = jnp.sum(hit).astype(jnp.int32)
+        return make_partition((total[None],), jnp.int32(1))
     if prog == "awk-sum":
         # awk '{s+=$1} END {print s}' : sum records to a single record.
         (vals,) = jax.tree.leaves(part.records)

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
 from repro.core import dataset as ds_lib
 from repro.core.container import (ContainerOp, Partition, Registry,
                                   DEFAULT_REGISTRY, make_partition)
@@ -61,12 +62,26 @@ class MaRe:
             self.dataset = data
         else:
             if mesh is None:
-                mesh = jax.make_mesh(
-                    (jax.device_count(),), (axis,),
-                    axis_types=(jax.sharding.AxisType.Auto,))
+                mesh = compat.make_mesh((jax.device_count(),), (axis,))
             self.dataset = ds_lib.from_host(data, mesh, axis)
         self.registry = registry
         self.plan = _plan or Plan()
+
+    @classmethod
+    def from_source(cls, source: Any, mesh: Optional[Mesh] = None,
+                    axis: str = "data", capacity: Optional[int] = None,
+                    width: Optional[int] = None,
+                    workers: Optional[int] = None,
+                    registry: Registry = DEFAULT_REGISTRY) -> "MaRe":
+        """Ingest a :class:`repro.io.DataSource` (storage backend + format
+        + split plan) into a sharded dataset via the parallel fetch pool —
+        the paper's heterogeneous-storage entry point (Fig. 5)."""
+        from repro.io.ingest import ingest  # deferred: io depends on core
+        if mesh is None:
+            mesh = compat.make_mesh((jax.device_count(),), (axis,))
+        ds = ingest(source, mesh, axis=axis, capacity=capacity,
+                    width=width, workers=workers)
+        return cls(ds, registry=registry)
 
     # -- primitives ---------------------------------------------------------
 
@@ -121,7 +136,7 @@ class MaRe:
                 part, op, axis_name=axis, axis_size=axis_size, depth=depth)
             return part.records, part.count[None]
 
-        fn = jax.jit(jax.shard_map(
+        fn = jax.jit(compat.shard_map(
             stage, mesh=mesh, in_specs=(P(axis), P(axis)),
             out_specs=(P(axis), P(axis))))
         out_records, out_counts = fn(ds.records, ds.counts)
@@ -155,7 +170,7 @@ class MaRe:
             return (res.part.records, res.part.count[None],
                     res.dropped[None])
 
-        fn = jax.jit(jax.shard_map(
+        fn = jax.jit(compat.shard_map(
             stage, mesh=mesh, in_specs=(P(axis), P(axis)),
             out_specs=(P(axis), P(axis), P(axis))))
         out_records, out_counts, dropped = fn(ds.records, ds.counts)
@@ -189,10 +204,13 @@ class MaRe:
         """For reduced (replicated) results: shard 0's valid records."""
         ds = execute_map_stage(self.dataset, self.plan)
         counts = jax.device_get(ds.counts)
-        cap = ds.capacity
+        n = ds.num_shards
+
         def first(leaf):
             host = jax.device_get(leaf)
-            return host[:int(counts[0])]
+            cap = host.shape[0] // n  # per-leaf shard-0 block
+            return host[:min(cap, int(counts[0]))]
+
         return jax.tree.map(first, ds.records)
 
     def num_partitions(self) -> int:

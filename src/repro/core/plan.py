@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.container import ContainerOp, Partition, make_partition
 from repro.core.dataset import ShardedDataset
 
@@ -60,7 +61,7 @@ def execute_map_stage(ds: ShardedDataset, plan: Plan) -> ShardedDataset:
         part = _apply_chain(plan.ops, records, counts[0])
         return part.records, part.count[None]
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(compat.shard_map(
         stage, mesh=mesh, in_specs=(P(axis), P(axis)),
         out_specs=(P(axis), P(axis))))
     out_records, out_counts = fn(ds.records, ds.counts)

@@ -109,32 +109,48 @@ class Prefetcher:
         it = iter(self.make_iter())
         idx = 0
         while not self._stop.is_set():
-            t0 = time.monotonic()
             result: Dict[str, Any] = {}
+            lock = threading.Lock()
             done = threading.Event()
 
-            def produce(slot_it=it):
+            def produce(slot_it):
                 try:
-                    result["batch"] = next(slot_it)
+                    batch = next(slot_it)
+                    with lock:
+                        if not result:
+                            result["batch"] = batch
+                            result["it"] = slot_it
                 except StopIteration:
-                    result["stop"] = True
-                done.set()
+                    with lock:
+                        if not result:   # a winner's batch beats a loser's
+                            result["stop"] = True      # exhaustion
+                finally:
+                    done.set()
 
-            worker = threading.Thread(target=produce, daemon=True)
+            worker = threading.Thread(target=produce, args=(it,), daemon=True)
             worker.start()
             timeout = self.deadline_s
             finished = done.wait(timeout) if timeout else done.wait()
             if not finished:
                 # straggler: speculatively re-dispatch on a FRESH iterator
-                # fast-forwarded to idx (deterministic source)
+                # fast-forwarded to idx (deterministic source); first result
+                # wins, and the winning iterator becomes the active one (the
+                # loser is mis-positioned and abandoned).
                 self.stats["respawned"] += 1
                 backup_it = iter(self.make_iter())
-                for _ in range(idx):
-                    next(backup_it)
-                done.wait()  # first (original) also allowed to finish
+                try:
+                    for _ in range(idx):
+                        next(backup_it)
+                except StopIteration:
+                    backup_it = None   # replay shorter than idx: no backup
+                if backup_it is not None:
+                    threading.Thread(target=produce, args=(backup_it,),
+                                     daemon=True).start()
+                done.wait()
 
             if result.get("stop"):
                 break
+            it = result["it"]
             self.q.put(result["batch"])
             self.stats["produced"] += 1
             idx += 1

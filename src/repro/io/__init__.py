@@ -1,0 +1,44 @@
+"""repro.io — heterogeneous-storage ingestion and out-of-core execution.
+
+The paper's ingestion story (Fig. 5: HDFS co-located, Swift same-DC, S3
+remote) realized as a real subsystem:
+
+* :mod:`repro.io.backends` — ``StorageBackend`` protocol (``list`` /
+  ``size`` / ``read_range``) with a real ``LocalFS`` plus emulated
+  ``HDFS`` / ``Swift`` / ``S3`` backends carrying the paper's latency
+  profiles.
+* :mod:`repro.io.formats` — line-delimited text, FASTA and SMILES record
+  readers that pack variable-length byte records into the fixed-shape
+  ``{"data": [cap, width] uint8, "len": [cap] int32}`` contract that
+  static-SPMD :class:`~repro.core.dataset.ShardedDataset` assumes.
+* :mod:`repro.io.splits` — InputSplit planning: files are carved into
+  byte-range splits so each shard fetches only its own data (locality by
+  construction, Hadoop InputFormat analogue).
+* :mod:`repro.io.source` — ``DataSource``: backend + format + split plan.
+* :mod:`repro.io.ingest` — parallel fetch pool + per-shard
+  ``jax.device_put`` producing a ``ShardedDataset``
+  (``MaRe.from_source`` entry point).
+* :mod:`repro.io.waves` — out-of-core wave executor: streams a source
+  bigger than one ``ShardedDataset`` through a map+reduce pipeline in
+  waves, folding per-wave reduce outputs with the associative combiner.
+"""
+from repro.io.backends import (BACKEND_PROFILES, EmulatedObjectStore, HDFS,
+                               LocalFS, S3, StorageBackend, Swift,
+                               make_backend)
+from repro.io.formats import (FastaFormat, LineFormat, RecordFormat,
+                              SmilesFormat, pack_records, unpack_records)
+from repro.io.ingest import ingest
+from repro.io.source import (DataSource, fasta_source, smiles_source,
+                             text_source)
+from repro.io.splits import InputSplit, assign_splits, plan_splits
+from repro.io.waves import WaveRunner, plan_waves
+
+__all__ = [
+    "StorageBackend", "LocalFS", "EmulatedObjectStore", "HDFS", "Swift",
+    "S3", "BACKEND_PROFILES", "make_backend",
+    "RecordFormat", "LineFormat", "FastaFormat", "SmilesFormat",
+    "pack_records", "unpack_records",
+    "InputSplit", "plan_splits", "assign_splits",
+    "DataSource", "text_source", "fasta_source", "smiles_source",
+    "ingest", "WaveRunner", "plan_waves",
+]

@@ -1,0 +1,161 @@
+"""Record formats: framing + packing for byte-oriented datasets.
+
+A :class:`RecordFormat` turns a byte-range split into complete records
+(Hadoop RecordReader analogue) and :func:`pack_records` packs the
+variable-length records into the fixed-shape static-SPMD contract the rest
+of the stack assumes:
+
+    {"data": uint8 [capacity, width], "len": int32 [capacity]}
+
+Split-boundary rule (classic InputFormat semantics): a record is owned by
+the split containing its **first byte**.  A reader starting mid-file
+discards the partial leading record (it belongs to the previous split) and
+reads past its end offset to finish its last record, so every record is
+read exactly once regardless of how files are carved.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.io.backends import StorageBackend
+from repro.io.splits import InputSplit
+
+_READAHEAD = 1 << 16
+
+
+class RecordFormat:
+    """Line-framed record reader; subclasses refine record extraction."""
+
+    name = "base"
+
+    def records_from_lines(self, lines: List[bytes]) -> List[bytes]:
+        """Map complete, newline-stripped lines to records."""
+        raise NotImplementedError  # pragma: no cover - abstract
+
+    def parse(self, payload: bytes) -> List[bytes]:
+        """Records in a payload that starts and ends on record boundaries."""
+        lines = [ln for ln in payload.split(b"\n")]
+        if lines and lines[-1] == b"":
+            lines.pop()
+        return self.records_from_lines(lines)
+
+    def read_split(self, backend: StorageBackend, split: InputSplit,
+                   readahead: int = _READAHEAD) -> List[bytes]:
+        """All records whose first byte lies in ``[split.start, split.stop)``."""
+        size = split.file_size
+        if split.start > 0:
+            # peek one byte back: if byte start-1 is a newline, a record
+            # begins exactly at `start` and is ours; otherwise we are
+            # mid-record and the partial head belongs to the previous
+            # split — skip through the first newline.
+            data = backend.read_range(split.path, split.start - 1,
+                                      split.stop)
+            if data[:1] == b"\n":
+                data = data[1:]
+            else:
+                nl = data.find(b"\n")
+                if nl < 0:
+                    # the record containing split.start extends past
+                    # split.stop; it is owned by an earlier split.
+                    return []
+                data = data[nl + 1:]
+        else:
+            data = backend.read_range(split.path, 0, split.stop)
+        # empty after head-trim: the split's last byte was the terminating
+        # newline of a record owned by an earlier split, and the next
+        # record starts at `stop` — owned by the next split.
+        if not data:
+            return []
+        # extend past stop to finish the final record
+        pos = split.stop
+        while pos < size and not data.endswith(b"\n"):
+            extra = backend.read_range(split.path, pos,
+                                       min(pos + readahead, size))
+            if not extra:
+                break
+            nl = extra.find(b"\n")
+            if nl >= 0:
+                data += extra[:nl + 1]
+                break
+            data += extra
+            pos += len(extra)
+        return self.parse(data)
+
+
+class LineFormat(RecordFormat):
+    """Line-delimited text: every non-empty line is one record."""
+
+    name = "text"
+
+    def records_from_lines(self, lines: List[bytes]) -> List[bytes]:
+        return [ln for ln in lines if ln.strip()]
+
+
+class FastaFormat(RecordFormat):
+    """FASTA: header lines (``>``) are dropped; each sequence line is one
+    record (a fixed-width-friendly chunking of the sequence — exact for
+    any per-base statistic such as GC count)."""
+
+    name = "fasta"
+
+    def records_from_lines(self, lines: List[bytes]) -> List[bytes]:
+        out = []
+        for ln in lines:
+            ln = ln.strip()
+            if ln and not ln.startswith(b">") and not ln.startswith(b";"):
+                out.append(ln)
+        return out
+
+
+class SmilesFormat(RecordFormat):
+    """SMILES: the first whitespace-separated token of each line (the
+    molecule string; trailing columns are ids/metadata)."""
+
+    name = "smiles"
+
+    def records_from_lines(self, lines: List[bytes]) -> List[bytes]:
+        out = []
+        for ln in lines:
+            parts = ln.split()
+            if parts:
+                out.append(parts[0])
+        return out
+
+
+FORMATS = {f.name: f for f in (LineFormat(), FastaFormat(), SmilesFormat())}
+
+
+def pack_records(records: List[bytes], capacity: Optional[int] = None,
+                 width: Optional[int] = None) -> Dict[str, np.ndarray]:
+    """Pack byte records into ``{"data": [cap, width] u8, "len": [cap] i32}``.
+
+    ``capacity``/``width`` default to the record count / longest record.
+    Records longer than ``width`` raise (truncation would corrupt data).
+    """
+    n = len(records)
+    cap = capacity if capacity is not None else max(n, 1)
+    if n > cap:
+        raise ValueError(f"{n} records exceed capacity {cap}")
+    maxlen = max((len(r) for r in records), default=1)
+    w = width if width is not None else max(maxlen, 1)
+    if maxlen > w:
+        raise ValueError(f"record length {maxlen} exceeds width {w}")
+    data = np.zeros((cap, w), np.uint8)
+    lens = np.zeros((cap,), np.int32)
+    for i, r in enumerate(records):
+        buf = np.frombuffer(r, np.uint8)
+        data[i, :buf.shape[0]] = buf
+        lens[i] = buf.shape[0]
+    return {"data": data, "len": lens}
+
+
+def unpack_records(packed: Dict[str, Any], count: Optional[int] = None
+                   ) -> List[bytes]:
+    """Inverse of :func:`pack_records` (host-side, for tests/debugging)."""
+    data = np.asarray(packed["data"])
+    lens = np.asarray(packed["len"])
+    n = count if count is not None else data.shape[0]
+    return [bytes(data[i, :int(lens[i])].tobytes()) for i in range(int(n))]

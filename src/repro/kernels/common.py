@@ -28,6 +28,22 @@ def use_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def tpu_compiler_params(**kwargs):
+    """Version-tolerant Pallas TPU compiler-params constructor.
+
+    ``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` across
+    JAX releases; resolve whichever this installation provides.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None)
+    if cls is None:  # pragma: no cover - ancient/renamed-again JAX
+        raise AttributeError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+            "TPUCompilerParams")
+    return cls(**kwargs)
+
+
 def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 

@@ -21,6 +21,7 @@ import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -295,7 +296,7 @@ def dry_run_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     t_compile = time.monotonic() - t0 - t_lower
 
     # XLA's own cost_analysis (trip-count-blind; kept as cross-check)
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     xla_flops = float(cost.get("flops", 0.0))
     xla_bytes = float(cost.get("bytes accessed", 0.0))
     try:

@@ -297,7 +297,11 @@ class HloCost:
                         # conservative: max flops branch
                         best = max(branch_costs, key=lambda x: x.flops)
                         c.add(best)
-            if not in_fusion:
+            # a bare `call` is control flow: its body (e.g. the CPU
+            # parallel-fusion wrapper around a dynamic-slice fusion)
+            # already accounts its own traffic — adding the call's full
+            # operands would re-count sliced buffers at full size.
+            if not in_fusion and not (op == "call" and called):
                 c.bytes += out_bytes + self._operand_bytes(ins, comp)
             return c
 

@@ -7,7 +7,9 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -24,11 +26,9 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             f"mesh {shape} needs {n} devices, have {len(devices)} — run "
             "under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "(launch/dryrun.py does this)")
-    return jax.make_mesh(shape, axes, devices=devices[:n],
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes, devices=devices[:n])
 
 
 def make_mesh(shape, axes, devices=None) -> Mesh:
     """Generic helper for tests/benchmarks."""
-    return jax.make_mesh(tuple(shape), tuple(axes), devices=devices,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(tuple(shape), tuple(axes), devices=devices)

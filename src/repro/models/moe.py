@@ -20,6 +20,7 @@ import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
+from repro import compat
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
@@ -212,7 +213,7 @@ def moe_ffn_sharded(p: Params, x: jnp.ndarray, cfg: ModelConfig,
         return (y2.reshape(bl, sl, d), aux[None],
                 n_drop.astype(jnp.float32)[None])
 
-    y, aux, dropped = jax.shard_map(
+    y, aux, dropped = compat.shard_map(
         inner, mesh=mesh,
         in_specs=(x_spec, P(None, None), w_spec, w_spec, w2_spec),
         out_specs=(x_spec, P(), P()),

@@ -22,6 +22,7 @@ from __future__ import annotations
 from typing import Any, Dict, Optional, Tuple
 
 import jax
+from repro import compat
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
@@ -111,5 +112,5 @@ def ssm_block_context_parallel(
         y = y * jax.nn.silu(z)
         return y @ p["out_proj"]
 
-    return jax.shard_map(inner, mesh=mesh, in_specs=spec, out_specs=spec,
+    return compat.shard_map(inner, mesh=mesh, in_specs=spec, out_specs=spec,
                          check_vma=False)(x)

@@ -23,6 +23,7 @@ import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
+from repro import compat
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -156,7 +157,7 @@ def make_train_step(model: Model, optimizer: Optimizer,
             in_batch_spec = jax.tree.map(
                 lambda _: P(batch_axes if len(batch_axes) > 1
                             else batch_axes[0]), batch)
-            return jax.shard_map(
+            return compat.shard_map(
                 inner, mesh=mesh,
                 in_specs=(P(), in_batch_spec),
                 out_specs=(P(), P()),

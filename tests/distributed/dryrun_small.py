@@ -3,12 +3,12 @@ reduced arch of each family (the full 512-dev dry-run is launch/dryrun.py)."""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
+from repro import compat
 from repro.configs import get_smoke_config
 from repro.launch.dryrun_lib import dry_run_cell
 from repro.configs.shapes import ShapeConfig
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((2, 4), ("data", "model"))
 shape_train = ShapeConfig("tiny_train", "train", 32, 8)
 shape_dec = ShapeConfig("tiny_dec", "decode", 64, 8)
 for arch in ("smollm-135m", "granite-moe-1b-a400m", "hymba-1.5b",

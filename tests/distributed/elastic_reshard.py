@@ -2,7 +2,8 @@
 import os, tempfile
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from repro import compat
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import CheckpointManager
 from repro.models import build_model
 from repro.models.common import ModelConfig
@@ -14,9 +15,8 @@ cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
                   dtype="float32", remat=False)
 model = build_model(cfg)
 state = init_train_state(model, adamw(), jax.random.PRNGKey(0))
-mesh8 = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
-mesh4 = jax.make_mesh((4, 2), ("data", "model"),
-                      axis_types=(AxisType.Auto,) * 2)
+mesh8 = compat.make_mesh((8,), ("data",))
+mesh4 = compat.make_mesh((4, 2), ("data", "model"))
 with tempfile.TemporaryDirectory() as d:
     mgr = CheckpointManager(d)
     mgr.save(1, state, blocking=True)

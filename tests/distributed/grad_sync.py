@@ -2,7 +2,8 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from repro import compat
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.models import build_model
 from repro.models.common import ModelConfig
 from repro.optim import adamw
@@ -15,7 +16,7 @@ cfg = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=32,
                   dtype="float32", remat=False)
 model = build_model(cfg)
 opt = adamw()
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("data",))
 rng = np.random.default_rng(0)
 batch = {"tokens": jnp.asarray(rng.integers(0, 64, (16, 16)), jnp.int32),
          "labels": jnp.asarray(rng.integers(0, 64, (16, 16)), jnp.int32)}

@@ -2,7 +2,7 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro import compat
 from repro.models.common import ModelConfig
 from repro.models import moe as moe_lib
 from repro.sharding import make_rules, use_rules
@@ -12,7 +12,7 @@ cfg = ModelConfig(name="m", family="moe", num_layers=1, d_model=32,
                   num_experts=8, experts_per_token=2, vocab_size=64,
                   dtype="float32", remat=False, capacity_factor=8.0)
 p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = compat.make_mesh((2, 4), ("data", "model"))
 x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 8, 32)), jnp.float32)
 y_dense, _ = moe_lib.moe_ffn_dense(p, x, cfg)
 for mode in ("weight_gather", "token_gather"):

@@ -2,7 +2,8 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from repro import compat
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.models.common import ModelConfig
 from repro.models import ssm as ssm_lib
 from repro.models.ssm_cp import ssm_block_context_parallel
@@ -14,8 +15,7 @@ p = ssm_lib.init_ssm(jax.random.PRNGKey(0), cfg)
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.normal(size=(2, 64, 32)), jnp.float32)
 y_ref, _ = ssm_lib.ssm_block(p, x, cfg)
-mesh = jax.make_mesh((1, 8), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = compat.make_mesh((1, 8), ("data", "model"))
 xs = jax.device_put(x, NamedSharding(mesh, P(None, "model", None)))
 y_cp = jax.jit(lambda x: ssm_block_context_parallel(
     p, x, cfg, mesh, batch_axes=None))(xs)

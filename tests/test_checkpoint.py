@@ -2,6 +2,7 @@
 import os
 
 import jax
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -77,8 +78,7 @@ def test_shardings_for_params_divisibility(tmp_path):
 
     model = build_model(CFG)
     params = model.init(jax.random.PRNGKey(0))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     sh = shardings_for_params(params, model.logical_axes(), mesh,
                               make_rules(mesh))
     flat = jax.tree.leaves(sh)

@@ -1,5 +1,6 @@
 """Core MaRe semantics on a single device (shard count 1)."""
 import jax
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -47,8 +48,7 @@ def test_reduce_requires_assoc_commutative():
 def test_dataset_roundtrip_uneven():
     data = (np.arange(7, dtype=np.int32),
             np.arange(14, dtype=np.float32).reshape(7, 2))
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("data",))
     ds = from_host(data, mesh)
     got = collect(ds)
     np.testing.assert_array_equal(got[0], data[0])

@@ -11,7 +11,8 @@ HERE = os.path.dirname(__file__)
 SRC = os.path.join(HERE, "..", "src")
 
 SCRIPTS = ["mare_e2e.py", "moe_sharded.py", "grad_sync.py",
-           "elastic_reshard.py", "dryrun_small.py", "ssm_cp.py"]
+           "elastic_reshard.py", "dryrun_small.py", "ssm_cp.py",
+           "ingest_waves.py"]
 
 
 @pytest.mark.parametrize("script", SCRIPTS)

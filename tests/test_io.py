@@ -1,0 +1,182 @@
+"""repro.io: backends, split planning, record formats, parallel ingest."""
+import os
+
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core import MaRe, collect
+from repro.io import (BACKEND_PROFILES, DataSource, EmulatedObjectStore,
+                      FastaFormat, LineFormat, LocalFS, SmilesFormat,
+                      assign_splits, fasta_source, ingest, make_backend,
+                      pack_records, plan_splits, text_source,
+                      unpack_records)
+
+
+@pytest.fixture
+def text_file(tmp_path):
+    p = tmp_path / "data.txt"
+    lines = [f"record-{i:04d}-{'x' * (i % 17)}" for i in range(200)]
+    p.write_text("\n".join(lines) + "\n")
+    return str(p), lines
+
+
+# -- backends ----------------------------------------------------------------
+
+def test_localfs_list_size_read_range(text_file):
+    path, lines = text_file
+    be = LocalFS(path)
+    assert be.list() == [path]
+    raw = open(path, "rb").read()
+    assert be.size(path) == len(raw)
+    assert be.read_range(path, 5, 25) == raw[5:25]
+    assert be.read_range(path, len(raw) - 3, len(raw) + 50) == raw[-3:]
+
+
+def test_localfs_lists_directory_recursively(tmp_path):
+    (tmp_path / "sub").mkdir()
+    (tmp_path / "a.txt").write_text("aaa\n")
+    (tmp_path / "sub" / "b.txt").write_text("bbb\n")
+    names = [os.path.basename(p) for p in LocalFS(str(tmp_path)).list()]
+    assert names == ["a.txt", "b.txt"]
+
+
+def test_emulated_backends_return_identical_bytes(text_file):
+    path, _ = text_file
+    raw = open(path, "rb").read()
+    for kind in ("hdfs", "swift", "s3"):
+        be = make_backend(kind, path)
+        assert be.name == kind
+        assert be.read_range(path, 0, len(raw)) == raw
+        assert be.stats["requests"] >= 1
+    assert set(BACKEND_PROFILES) == {"hdfs", "swift", "s3"}
+
+
+def test_emulated_backend_latency_is_paid(text_file):
+    import time
+    path, _ = text_file
+    be = EmulatedObjectStore(LocalFS(path), latency_s=0.02)
+    t0 = time.monotonic()
+    be.read_range(path, 0, 10)
+    assert time.monotonic() - t0 >= 0.02
+
+
+# -- split planning ----------------------------------------------------------
+
+def test_plan_splits_cover_file_exactly(text_file):
+    path, _ = text_file
+    be = LocalFS(path)
+    size = be.size(path)
+    splits = plan_splits(be, split_bytes=100)
+    assert splits[0].start == 0 and splits[-1].stop == size
+    for a, b in zip(splits, splits[1:]):
+        assert a.stop == b.start          # contiguous, no gaps/overlap
+    assert sum(s.length for s in splits) == size
+
+
+def test_plan_splits_num_splits_override(text_file):
+    path, _ = text_file
+    splits = plan_splits(LocalFS(path), num_splits=7)
+    assert 6 <= len(splits) <= 8
+
+
+def test_assign_splits_balances_and_preserves_order(text_file):
+    path, _ = text_file
+    splits = plan_splits(LocalFS(path), split_bytes=64)
+    bins = assign_splits(splits, 4)
+    assert sum(len(b) for b in bins) == len(splits)
+    loads = [sum(s.length for s in b) for b in bins]
+    assert max(loads) - min(loads) <= 2 * 64
+    for b in bins:   # plan order within a shard
+        starts = [(s.path, s.start) for s in b]
+        assert starts == sorted(starts)
+
+
+# -- formats -----------------------------------------------------------------
+
+def test_line_format_exactly_once_across_any_split_size(text_file):
+    """The InputFormat ownership rule: every record is read exactly once
+    no matter how the file is carved."""
+    path, lines = text_file
+    be = LocalFS(path)
+    fmt = LineFormat()
+    expected = [ln.encode() for ln in lines]
+    for split_bytes in (17, 64, 100, 999, 10 ** 9):
+        splits = plan_splits(be, split_bytes=split_bytes)
+        got = [r for sp in splits for r in fmt.read_split(be, sp)]
+        assert got == expected, f"split_bytes={split_bytes}"
+
+
+def test_fasta_format_drops_headers(tmp_path):
+    p = tmp_path / "g.fa"
+    p.write_text(">chr1 desc\nATGC\nGGCC\n>chr2\nTTAA\n")
+    be = LocalFS(str(p))
+    (sp,) = plan_splits(be)
+    assert FastaFormat().read_split(be, sp) == [b"ATGC", b"GGCC", b"TTAA"]
+
+
+def test_smiles_format_first_token(tmp_path):
+    p = tmp_path / "m.smi"
+    p.write_text("CCO ethanol 42\nc1ccccc1 benzene\n\nO water\n")
+    be = LocalFS(str(p))
+    (sp,) = plan_splits(be)
+    assert SmilesFormat().read_split(be, sp) == [b"CCO", b"c1ccccc1", b"O"]
+
+
+def test_pack_unpack_roundtrip():
+    recs = [b"a", b"bb", b"", b"dddd"]
+    packed = pack_records(recs, capacity=8, width=16)
+    assert packed["data"].shape == (8, 16)
+    assert packed["data"].dtype == np.uint8
+    assert list(packed["len"][:4]) == [1, 2, 0, 4]
+    assert unpack_records(packed, count=4) == recs
+    with pytest.raises(ValueError):
+        pack_records(recs, capacity=2)
+    with pytest.raises(ValueError):
+        pack_records(recs, width=2)
+
+
+# -- ingestion ---------------------------------------------------------------
+
+def test_ingest_roundtrips_all_records(text_file):
+    path, lines = text_file
+    source = text_source(path, split_bytes=128)
+    mesh = compat.make_mesh((1,), ("data",))
+    ds = ingest(source, mesh)
+    out = collect(ds)
+    got = sorted(unpack_records(out, count=int(np.asarray(
+        np.asarray(ds.counts)).sum())))
+    assert got == sorted(ln.encode() for ln in lines)
+
+
+def test_ingest_through_emulated_backend_matches_local(tmp_path):
+    p = tmp_path / "g.fa"
+    p.write_text(">h\n" + "\n".join(["ATGCGC"] * 50) + "\n")
+    mesh = compat.make_mesh((1,), ("data",))
+    ref = collect(ingest(fasta_source(str(p), split_bytes=64), mesh))
+    for kind in ("hdfs", "swift", "s3"):
+        src = fasta_source(str(p), backend=make_backend(kind, str(p)),
+                           split_bytes=64)
+        out = collect(ingest(src, mesh))
+        np.testing.assert_array_equal(out["data"], ref["data"])
+        np.testing.assert_array_equal(out["len"], ref["len"])
+
+
+def test_ingest_capacity_overflow_raises(text_file):
+    path, _ = text_file
+    mesh = compat.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="capacity"):
+        ingest(text_source(path), mesh, capacity=4)
+
+
+def test_mare_from_source_gc_pipeline(tmp_path):
+    p = tmp_path / "g.fa"
+    rng = np.random.default_rng(0)
+    seq = "".join(np.array(list("ATGC"))[rng.integers(0, 4, 3000)])
+    p.write_text(">chr\n" + "\n".join(
+        seq[i:i + 60] for i in range(0, len(seq), 60)) + "\n")
+    total = (MaRe.from_source(fasta_source(str(p), split_bytes=256))
+             .map(image="ubuntu", command="grep-chars GC")
+             .reduce(image="ubuntu", command="awk-sum")
+             .collect_first_shard())
+    assert int(total[0][0]) == seq.count("G") + seq.count("C")
