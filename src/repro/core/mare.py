@@ -17,6 +17,13 @@ default K=2); ``repartition_by`` co-locates records by key (hash shuffle).
 Ops are pulled from the registry by image name; a ``command`` string is
 passed to the image factory (images interpret their own command grammar,
 like a container ENTRYPOINT).
+
+All primitives are **lazy**: they append stages to a logical plan, and an
+action (``collect`` / ``collect_first_shard`` / ``cache`` / ``dataset``)
+hands the whole chain to :mod:`repro.core.planner`, which compiles it into
+a single ``shard_map`` program (memoized per pipeline shape) — so a
+``map -> repartitionBy -> map -> reduce`` chain is one locality-preserving
+job, not K independently launched stages.
 """
 from __future__ import annotations
 
@@ -29,13 +36,12 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
 from repro.core import dataset as ds_lib
+from repro.core import planner as planner_lib
 from repro.core.container import (ContainerOp, Partition, Registry,
                                   DEFAULT_REGISTRY, make_partition)
 from repro.core.dataset import ShardedDataset
 from repro.core.mounts import Mount
-from repro.core.plan import Plan, execute_map_stage, _apply_chain
-from repro.core.shuffle import shuffle_partition
-from repro.core.tree_reduce import tree_reduce_partition
+from repro.core.plan import Plan
 
 
 def _resolve_op(image: Optional[str], op: Optional[ContainerOp],
@@ -52,20 +58,29 @@ def _resolve_op(image: Optional[str], op: Optional[ContainerOp],
 
 
 class MaRe:
-    """Driver handle over a :class:`ShardedDataset` with a lazy map plan."""
+    """Driver handle over a :class:`ShardedDataset` with a lazy stage plan.
+
+    ``plan_cache`` overrides the process-wide compile cache (mostly for
+    tests/benchmarks); ``fuse=False`` forces stage-at-a-time execution
+    (each stage its own program — the pre-planner schedule).
+    """
 
     def __init__(self, data: Any, mesh: Optional[Mesh] = None,
                  axis: str = "data",
                  registry: Registry = DEFAULT_REGISTRY,
-                 _plan: Optional[Plan] = None):
+                 _plan: Optional[Plan] = None,
+                 plan_cache: Optional["planner_lib.PlanCache"] = None,
+                 fuse: bool = True):
         if isinstance(data, ShardedDataset):
-            self.dataset = data
+            self._dataset = data
         else:
             if mesh is None:
                 mesh = compat.make_mesh((jax.device_count(),), (axis,))
-            self.dataset = ds_lib.from_host(data, mesh, axis)
+            self._dataset = ds_lib.from_host(data, mesh, axis)
         self.registry = registry
         self.plan = _plan or Plan()
+        self.plan_cache = plan_cache
+        self.fuse = fuse
 
     @classmethod
     def from_source(cls, source: Any, mesh: Optional[Mesh] = None,
@@ -82,6 +97,25 @@ class MaRe:
         ds = ingest(source, mesh, axis=axis, capacity=capacity,
                     width=width, workers=workers)
         return cls(ds, registry=registry)
+
+    def _chain(self, plan: Plan) -> "MaRe":
+        return MaRe(self._dataset, registry=self.registry, _plan=plan,
+                    plan_cache=self.plan_cache, fuse=self.fuse)
+
+    def _materialize(self) -> ShardedDataset:
+        """Run all pending stages as one fused program (memoized compile);
+        shuffle-overflow is checked once, after the single dispatch."""
+        if not self.plan.empty:
+            self._dataset = planner_lib.execute(
+                self._dataset, self.plan, cache=self.plan_cache,
+                fuse=self.fuse)
+            self.plan = Plan()
+        return self._dataset
+
+    @property
+    def dataset(self) -> ShardedDataset:
+        """The materialized dataset (triggers execution of pending stages)."""
+        return self._materialize()
 
     # -- primitives ---------------------------------------------------------
 
@@ -100,9 +134,7 @@ class MaRe:
         op = _resolve_op(image, op, command, self.registry,
                          input_mount or inputMountPoint,
                          output_mount or outputMountPoint, **params)
-        out = MaRe(self.dataset, registry=self.registry,
-                   _plan=self.plan.then(op))
-        return out
+        return self._chain(self.plan.then(op))
 
     def reduce(self, *, image: Optional[str] = None,
                op: Optional[ContainerOp] = None,
@@ -115,8 +147,9 @@ class MaRe:
                **params: Any) -> "MaRe":
         """K-level tree aggregation of all partitions to one (paper K=2).
 
-        Runs the pending map chain and the reduce tree in a single
-        ``shard_map`` computation; the result is replicated on every shard
+        Lazy: appends a reduce stage; the pending map chain, the reduce
+        tree and any upstream shuffles run in a single ``shard_map``
+        program at action time.  The result is replicated on every shard
         (single-partition RDD')."""
         op = _resolve_op(image, op, command, self.registry,
                          input_mount or inputMountPoint,
@@ -125,64 +158,25 @@ class MaRe:
             raise ValueError(
                 f"reduce combiner {op.name} is not marked associative+"
                 "commutative (paper: required for tree-reduce consistency)")
-        ds = self.dataset
-        mesh, axis = ds.mesh, ds.axis
-        axis_size = ds.num_shards
-        map_ops = self.plan.ops
-
-        def stage(records, counts):
-            part = _apply_chain(map_ops, records, counts[0])
-            part = tree_reduce_partition(
-                part, op, axis_name=axis, axis_size=axis_size, depth=depth)
-            return part.records, part.count[None]
-
-        fn = jax.jit(compat.shard_map(
-            stage, mesh=mesh, in_specs=(P(axis), P(axis)),
-            out_specs=(P(axis), P(axis))))
-        out_records, out_counts = fn(ds.records, ds.counts)
-        # Result is replicated; present it as a 1-logical-partition dataset.
-        reduced = ShardedDataset(records=out_records, counts=out_counts,
-                                 mesh=mesh, axis=axis)
-        return MaRe(reduced, registry=self.registry)
+        return self._chain(self.plan.then_reduce(op, depth))
 
     def repartition_by(self, key_by: Callable[[Any], jax.Array],
                        capacity: Optional[int] = None,
                        num_partitions: Optional[int] = None) -> "MaRe":
-        """Hash-shuffle records so equal keys share a partition.
+        """Hash-shuffle records so equal keys share a partition (lazy).
 
         ``key_by(records) -> int array [capacity]`` (vectorized keyBy over
         the record pytree).  ``num_partitions`` other than the axis size is
         emulated by keying into ``num_partitions`` buckets spread over the
         axis (paper sets it to #workers, which is the axis size here).
+
+        Capacity overflow (dropped records) raises ``RuntimeError`` at
+        action time: the fused program returns per-shuffle drop counters
+        as outputs, so a chain with K shuffles pays one host sync total
+        instead of K.
         """
-        ds = self.dataset
-        mesh, axis = ds.mesh, ds.axis
-        axis_size = ds.num_shards
-        map_ops = self.plan.ops
-
-        def stage(records, counts):
-            part = _apply_chain(map_ops, records, counts[0])
-            keys = key_by(part.records)
-            if num_partitions is not None and num_partitions != axis_size:
-                keys = keys % num_partitions
-            res = shuffle_partition(part, keys, axis_name=axis,
-                                    axis_size=axis_size, capacity=capacity)
-            return (res.part.records, res.part.count[None],
-                    res.dropped[None])
-
-        fn = jax.jit(compat.shard_map(
-            stage, mesh=mesh, in_specs=(P(axis), P(axis)),
-            out_specs=(P(axis), P(axis), P(axis))))
-        out_records, out_counts, dropped = fn(ds.records, ds.counts)
-        total_dropped = int(jax.device_get(dropped).sum())
-        if total_dropped:
-            raise RuntimeError(
-                f"repartition_by overflow: {total_dropped} records dropped; "
-                "raise `capacity` (paper analogue: partition exceeded tmpfs "
-                "capacity — fall back to a larger staging area)")
-        out = ShardedDataset(records=out_records, counts=out_counts,
-                             mesh=mesh, axis=axis)
-        return MaRe(out, registry=self.registry)
+        return self._chain(self.plan.then_shuffle(
+            key_by, capacity=capacity, num_partitions=num_partitions))
 
     # Paper spelling alias
     repartitionBy = repartition_by
@@ -190,19 +184,17 @@ class MaRe:
     # -- actions ------------------------------------------------------------
 
     def cache(self) -> "MaRe":
-        """Materialize the pending map chain (RDD.cache analogue)."""
-        return MaRe(execute_map_stage(self.dataset, self.plan),
-                    registry=self.registry)
+        """Materialize the pending plan (RDD.cache analogue)."""
+        return MaRe(self._materialize(), registry=self.registry,
+                    plan_cache=self.plan_cache, fuse=self.fuse)
 
     def collect(self) -> Any:
         """Run pending stages and gather valid records to host."""
-        ds = execute_map_stage(self.dataset, self.plan)
-        out = ds_lib.collect(ds)
-        return out
+        return ds_lib.collect(self._materialize())
 
     def collect_first_shard(self) -> Any:
         """For reduced (replicated) results: shard 0's valid records."""
-        ds = execute_map_stage(self.dataset, self.plan)
+        ds = self._materialize()
         counts = jax.device_get(ds.counts)
         n = ds.num_shards
 
@@ -214,8 +206,10 @@ class MaRe:
         return jax.tree.map(first, ds.records)
 
     def num_partitions(self) -> int:
-        return self.dataset.num_shards
+        return self._dataset.num_shards
 
     def describe(self) -> str:
-        return (f"MaRe(shards={self.dataset.num_shards}, "
-                f"cap={self.dataset.capacity}, stage=[{self.plan.describe()}])")
+        """Human-readable view of the pending stage DAG (no execution)."""
+        return (f"MaRe(shards={self._dataset.num_shards}, "
+                f"cap={self._dataset.capacity}, "
+                f"plan=[{self.plan.describe()}])")

@@ -1,42 +1,183 @@
-"""Lazy execution plan — the Spark-DAG/stage analogue.
+"""Lazy execution plan — the Spark-DAG/stage analogue, now a stage DAG.
 
 MaRe inherits Spark's lazy evaluation: chained ``map`` calls generate a
 single stage (one ``mapPartitions`` chain, no shuffle); ``reduce`` and
-``repartitionBy`` are stage boundaries.  Here a :class:`Plan` accumulates
-ContainerOps; :func:`execute_map_stage` fuses the pending map chain into a
-single ``shard_map`` + ``jit`` computation — one XLA module, zero
-collectives, locality preserved by construction (DESIGN.md §2).
+``repartitionBy`` are stage *boundaries* — but not execution boundaries.
+A :class:`Plan` accumulates a linear DAG of :class:`MapStage` /
+:class:`ShuffleStage` / :class:`ReduceStage` nodes; nothing runs until an
+action.  :mod:`repro.core.planner` lowers the whole DAG into a **single**
+``shard_map`` + ``jit`` program — map ops fused into their downstream
+shuffle/reduce, one XLA module per pipeline shape, locality preserved by
+construction (DESIGN.md §2) — and memoizes compiled programs so
+interactive re-execution (paper Fig. 6) pays zero re-trace.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, List, Optional, Tuple
+import hashlib
+from typing import Any, Callable, Hashable, Optional, Tuple, Union
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+import numpy as np
 
-from repro import compat
 from repro.core.container import ContainerOp, Partition, make_partition
-from repro.core.dataset import ShardedDataset
+
+
+class _IdKey:
+    """Identity-based hashable wrapper for unhashable op params.
+
+    Param values are baked into the traced program, so two pipelines may
+    only share a compiled program when their params hold the same value —
+    a repr() fallback could collide (e.g. numpy's truncated repr of large
+    arrays) and silently reuse a program compiled with different
+    constants.  Holding a strong reference keeps ``id`` from being
+    recycled for as long as the cache key lives.  CAVEAT: identity keying
+    means in-place mutation of the param object goes unseen (the cached
+    program keeps the old baked-in value) — numpy arrays are therefore
+    keyed by content digest in :func:`_freeze`; anything that falls
+    through to ``_IdKey`` must be treated as immutable, matching
+    ``jax.jit``'s own semantics for closed-over constants.
+    """
+
+    __slots__ = ("obj",)
+
+    def __init__(self, obj: Any) -> None:
+        self.obj = obj
+
+    def __hash__(self) -> int:
+        return id(self.obj)
+
+    def __eq__(self, other: Any) -> bool:
+        return isinstance(other, _IdKey) and other.obj is self.obj
+
+    def __repr__(self) -> str:
+        return f"_IdKey({type(self.obj).__name__}@{id(self.obj):#x})"
+
+
+def _freeze(value: Any) -> Hashable:
+    """Hashable view of an op parameter.
+
+    Hashable values key on themselves; numpy arrays key on a content
+    digest (so in-place mutation correctly misses the cache); any other
+    unhashable value keys on object identity and must not be mutated.
+    """
+    try:
+        hash(value)
+        return value
+    except TypeError:
+        pass
+    if isinstance(value, np.ndarray):
+        arr = np.ascontiguousarray(value)
+        digest = hashlib.sha1(arr.tobytes()).hexdigest()
+        return ("ndarray", arr.shape, str(arr.dtype), digest)
+    return _IdKey(value)
+
+
+def op_signature(op: ContainerOp) -> Tuple:
+    """Hashable identity of a ContainerOp for plan/compile-cache keying.
+
+    Two ops with the same registry function, command, params and mounts
+    trace to the same jaxpr, so they may share a compiled program.
+    """
+    params = tuple(sorted((k, _freeze(v)) for k, v in op.params.items()))
+    return (op.image, op.tag, op.command, op.fn, op.out_capacity,
+            repr(op.input_mount), repr(op.output_mount), params)
+
+
+@dataclasses.dataclass(frozen=True)
+class MapStage:
+    """A fused chain of per-partition ContainerOps (no collectives)."""
+
+    ops: Tuple[ContainerOp, ...]
+
+    def signature(self) -> Tuple:
+        return ("map",) + tuple(op_signature(op) for op in self.ops)
+
+    def describe(self) -> str:
+        return "map[" + " | ".join(op.name for op in self.ops) + "]"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShuffleStage:
+    """Hash repartition by a vectorized keyBy (one ``all_to_all``)."""
+
+    key_by: Callable[[Any], jax.Array]
+    capacity: Optional[int] = None
+    num_partitions: Optional[int] = None
+
+    def signature(self) -> Tuple:
+        # key_by keys on the callable object: two equal lambdas miss the
+        # cache, and (as with jax.jit) values it closes over are baked in
+        # at trace time — mutating them without a new callable goes unseen.
+        return ("shuffle", self.key_by, self.capacity, self.num_partitions)
+
+    def describe(self) -> str:
+        extra = (f", parts={self.num_partitions}"
+                 if self.num_partitions is not None else "")
+        return f"shuffle(cap={self.capacity}{extra})"
+
+
+@dataclasses.dataclass(frozen=True)
+class ReduceStage:
+    """K-level tree aggregation of all partitions down to one."""
+
+    op: ContainerOp
+    depth: int = 2
+
+    def signature(self) -> Tuple:
+        return ("reduce", op_signature(self.op), self.depth)
+
+    def describe(self) -> str:
+        return f"reduce[{self.op.name}, depth={self.depth}]"
+
+
+Stage = Union[MapStage, ShuffleStage, ReduceStage]
 
 
 @dataclasses.dataclass
 class Plan:
-    """A pending chain of fused map ops (one stage)."""
+    """A pending linear DAG of stages (immutable builder)."""
 
-    ops: Tuple[ContainerOp, ...] = ()
+    stages: Tuple[Stage, ...] = ()
 
     def then(self, op: ContainerOp) -> "Plan":
-        return Plan(ops=self.ops + (op,))
+        """Append a map op, fusing into a trailing MapStage if present."""
+        if self.stages and isinstance(self.stages[-1], MapStage):
+            head, last = self.stages[:-1], self.stages[-1]
+            return Plan(stages=head + (MapStage(last.ops + (op,)),))
+        return Plan(stages=self.stages + (MapStage((op,)),))
+
+    def then_shuffle(self, key_by: Callable[[Any], jax.Array],
+                     capacity: Optional[int] = None,
+                     num_partitions: Optional[int] = None) -> "Plan":
+        return Plan(stages=self.stages + (
+            ShuffleStage(key_by, capacity, num_partitions),))
+
+    def then_reduce(self, op: ContainerOp, depth: int = 2) -> "Plan":
+        return Plan(stages=self.stages + (ReduceStage(op, depth),))
 
     @property
     def empty(self) -> bool:
-        return not self.ops
+        return not self.stages
+
+    @property
+    def ops(self) -> Tuple[ContainerOp, ...]:
+        """All pending map ops (legacy view of a map-only plan)."""
+        return tuple(op for st in self.stages
+                     if isinstance(st, MapStage) for op in st.ops)
+
+    @property
+    def num_shuffles(self) -> int:
+        """Shuffle stages whose overflow counter the program must output."""
+        return sum(isinstance(st, ShuffleStage) for st in self.stages)
+
+    def signature(self) -> Tuple:
+        """Hashable pipeline shape — the compile-cache key component."""
+        return tuple(st.signature() for st in self.stages)
 
     def describe(self) -> str:
-        return " | ".join(op.name for op in self.ops) or "<identity>"
+        return " -> ".join(st.describe() for st in self.stages) \
+            or "<identity>"
 
 
 def _apply_chain(ops: Tuple[ContainerOp, ...], records: Any,
@@ -49,28 +190,3 @@ def _apply_chain(ops: Tuple[ContainerOp, ...], records: Any,
         if op.output_mount is not None:
             op.output_mount.validate(part.records)
     return part
-
-
-def execute_map_stage(ds: ShardedDataset, plan: Plan) -> ShardedDataset:
-    """Fuse and run the pending map chain as one shard_map stage."""
-    if plan.empty:
-        return ds
-    mesh, axis = ds.mesh, ds.axis
-
-    def stage(records, counts):
-        part = _apply_chain(plan.ops, records, counts[0])
-        return part.records, part.count[None]
-
-    fn = jax.jit(compat.shard_map(
-        stage, mesh=mesh, in_specs=(P(axis), P(axis)),
-        out_specs=(P(axis), P(axis))))
-    out_records, out_counts = fn(ds.records, ds.counts)
-    return ds.with_records(out_records, out_counts)
-
-
-def stage_fn_for_specs(plan: Plan):
-    """Return the raw shard-interior function (for dry-run lowering)."""
-    def stage(records, counts):
-        part = _apply_chain(plan.ops, records, counts[0])
-        return part.records, part.count[None]
-    return stage

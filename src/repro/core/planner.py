@@ -1,0 +1,223 @@
+"""Whole-pipeline lowering: a stage DAG compiled to ONE shard_map program.
+
+MaRe's headline advantage over workflow engines is locality and
+interactive processing: a ``map -> repartitionBy -> map -> reduce`` chain
+should execute as one locality-preserving job, not as a sequence of
+independently launched stages (the DAG-vs-Hadoop lesson of the MapReduce
+survey literature).  The planner delivers that on JAX:
+
+* :func:`lower` turns a :class:`~repro.core.plan.Plan` into a single
+  shard-interior function — map chains feed straight into their downstream
+  shuffle/reduce with no intermediate ``ShardedDataset`` materialization.
+* Shuffle overflow counters become **outputs of the same program** (one
+  ``[num_shuffles]`` vector per shard) instead of a host sync per shuffle;
+  the driver checks them once, after the single dispatch.
+* Compiled programs are memoized in a :class:`PlanCache` keyed on
+  (stage structure, record shapes/dtypes, mesh, axis), so re-running an
+  identical pipeline — the paper's Fig. 6 interactive workflow, or every
+  wave of an out-of-core run — pays zero re-trace and zero re-compile.
+
+``execute(..., fuse=False)`` preserves the old stage-at-a-time schedule
+(each stage its own program, overflow synced mid-pipeline) for debugging
+and as the benchmark baseline (benchmarks/pipeline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core.container import Partition, make_partition
+from repro.core.dataset import ShardedDataset
+from repro.core.plan import (MapStage, Plan, ReduceStage, ShuffleStage,
+                             _apply_chain)
+from repro.core.shuffle import shuffle_partition
+from repro.core.tree_reduce import tree_reduce_partition
+
+
+@dataclasses.dataclass
+class CompiledProgram:
+    """A jitted whole-pipeline shard_map program plus its plan metadata."""
+
+    fn: Callable[..., Tuple]      # (records, counts) -> outputs
+    num_shuffles: int             # trailing overflow-vector arity
+    key: Hashable                 # cache key it was compiled under
+
+    def __call__(self, records: Any, counts: jax.Array) -> Tuple:
+        return self.fn(records, counts)
+
+
+class PlanCache:
+    """Compile cache: pipeline shape -> :class:`CompiledProgram` (LRU).
+
+    ``misses`` counts programs traced+compiled; ``hits`` counts reuses.
+    The jitted callable is reused by object identity, so JAX's own jit
+    cache is hit too — a cache hit implies zero re-trace.  ``maxsize``
+    bounds retained programs (keys pin jitted executables and, for
+    shuffle stages, the ``key_by`` callable — unbounded growth would be
+    a leak in long interactive sessions with churning pipeline shapes).
+    """
+
+    def __init__(self, maxsize: int = 128) -> None:
+        self._programs: "OrderedDict[Hashable, CompiledProgram]" = \
+            OrderedDict()
+        self.maxsize = maxsize
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._programs)
+
+    def stats(self) -> Dict[str, int]:
+        return {"programs": len(self._programs), "hits": self.hits,
+                "misses": self.misses}
+
+    def clear(self) -> None:
+        self._programs.clear()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get_or_compile(self, key: Hashable,
+                       build: Callable[[], CompiledProgram]
+                       ) -> CompiledProgram:
+        prog = self._programs.get(key)
+        if prog is not None:
+            self.hits += 1
+            self._programs.move_to_end(key)
+            return prog
+        self.misses += 1
+        prog = build()
+        self._programs[key] = prog
+        while len(self._programs) > self.maxsize:
+            self._programs.popitem(last=False)
+            self.evictions += 1
+        return prog
+
+
+#: Process-wide default cache (MaRe actions and WaveRunner waves share it,
+#: so a wave pipeline compiles once and amortizes across all waves).
+DEFAULT_CACHE = PlanCache()
+
+
+def program_key(plan: Plan, ds: ShardedDataset) -> Hashable:
+    """Cache key: stage structure x input shapes/dtypes x mesh geometry."""
+    leaves, treedef = jax.tree.flatten(ds.records)
+    shapes = tuple((leaf.shape, str(leaf.dtype)) for leaf in leaves)
+    return (plan.signature(), treedef, shapes,
+            (tuple(ds.counts.shape), str(ds.counts.dtype)),
+            ds.mesh, ds.axis)
+
+
+def _apply_stage(stage, part: Partition, axis: str, axis_size: int
+                 ) -> Tuple[Partition, Optional[jax.Array]]:
+    """Shard-interior application of one stage; returns (part, dropped?)."""
+    if isinstance(stage, MapStage):
+        return _apply_chain(stage.ops, part.records, part.count), None
+    if isinstance(stage, ShuffleStage):
+        keys = stage.key_by(part.records)
+        if (stage.num_partitions is not None
+                and stage.num_partitions != axis_size):
+            keys = keys % stage.num_partitions
+        res = shuffle_partition(part, keys, axis_name=axis,
+                                axis_size=axis_size,
+                                capacity=stage.capacity)
+        return res.part, res.dropped
+    if isinstance(stage, ReduceStage):
+        part = tree_reduce_partition(
+            part, stage.op, axis_name=axis, axis_size=axis_size,
+            depth=stage.depth)
+        return part, None
+    raise TypeError(f"unknown stage type {type(stage).__name__}")
+
+
+def lower(plan: Plan, axis: str, axis_size: int):
+    """Build the shard-interior function for a whole plan.
+
+    Returns ``interior(records, counts) -> (records, counts[, dropped])``
+    where ``dropped`` is a ``[num_shuffles]`` int32 vector (omitted when
+    the plan has no shuffle stage).
+    """
+
+    def interior(records, counts):
+        part = make_partition(records, counts[0])
+        dropped: List[jax.Array] = []
+        for stage in plan.stages:
+            part, d = _apply_stage(stage, part, axis, axis_size)
+            if d is not None:
+                dropped.append(d)
+        outs = (part.records, part.count[None])
+        if dropped:
+            outs = outs + (jnp.stack(dropped).astype(jnp.int32),)
+        return outs
+
+    return interior
+
+
+def compile_plan(plan: Plan, ds: ShardedDataset,
+                 cache: Optional[PlanCache] = None) -> CompiledProgram:
+    """Memoized lowering of ``plan`` against ``ds``'s shapes and mesh."""
+    cache = cache if cache is not None else DEFAULT_CACHE
+    mesh, axis = ds.mesh, ds.axis
+    key = program_key(plan, ds)
+
+    def build() -> CompiledProgram:
+        num_shuffles = plan.num_shuffles
+        interior = lower(plan, axis, int(mesh.shape[axis]))
+        out_specs = (P(axis), P(axis)) + ((P(axis),) if num_shuffles else ())
+        fn = jax.jit(compat.shard_map(
+            interior, mesh=mesh, in_specs=(P(axis), P(axis)),
+            out_specs=out_specs))
+        return CompiledProgram(fn=fn, num_shuffles=num_shuffles, key=key)
+
+    return cache.get_or_compile(key, build)
+
+
+def _check_overflow(dropped: jax.Array, num_shuffles: int,
+                    num_shards: int) -> None:
+    """One host sync for ALL shuffle stages, after the single dispatch."""
+    per_stage = np.asarray(jax.device_get(dropped)).reshape(
+        num_shards, num_shuffles).sum(axis=0)
+    total = int(per_stage.sum())
+    if total:
+        worst = int(per_stage.argmax())
+        raise RuntimeError(
+            f"repartition_by overflow: {total} records dropped "
+            f"(per shuffle stage: {per_stage.tolist()}, worst stage "
+            f"#{worst}); raise `capacity` (paper analogue: partition "
+            "exceeded tmpfs capacity — fall back to a larger staging area)")
+
+
+def execute(ds: ShardedDataset, plan: Plan, *,
+            cache: Optional[PlanCache] = None,
+            fuse: bool = True) -> ShardedDataset:
+    """Run a whole plan against a dataset.
+
+    ``fuse=True`` (default): one compiled program for the entire DAG;
+    shuffle-overflow counters come back as outputs of that program and
+    are checked once.  ``fuse=False``: stage-at-a-time execution (each
+    stage its own program, overflow synced after each shuffle) — the
+    pre-planner schedule, kept for debugging and benchmarking.
+    """
+    if plan.empty:
+        return ds
+    if not fuse:
+        for stage in plan.stages:
+            ds = execute(ds, Plan(stages=(stage,)), cache=cache, fuse=True)
+        return ds
+    prog = compile_plan(plan, ds, cache)
+    outs = prog(ds.records, ds.counts)
+    if prog.num_shuffles:
+        out_records, out_counts, dropped = outs
+        _check_overflow(dropped, prog.num_shuffles, ds.num_shards)
+    else:
+        out_records, out_counts = outs
+    return ShardedDataset(records=out_records, counts=out_counts,
+                          mesh=ds.mesh, axis=ds.axis)

@@ -27,7 +27,7 @@ from repro.io.backends import (BACKEND_PROFILES, EmulatedObjectStore, HDFS,
                                make_backend)
 from repro.io.formats import (FastaFormat, LineFormat, RecordFormat,
                               SmilesFormat, pack_records, unpack_records)
-from repro.io.ingest import ingest
+from repro.io.ingest import default_workers, ingest
 from repro.io.source import (DataSource, fasta_source, smiles_source,
                              text_source)
 from repro.io.splits import InputSplit, assign_splits, plan_splits
@@ -40,5 +40,5 @@ __all__ = [
     "pack_records", "unpack_records",
     "InputSplit", "plan_splits", "assign_splits",
     "DataSource", "text_source", "fasta_source", "smiles_source",
-    "ingest", "WaveRunner", "plan_waves",
+    "ingest", "default_workers", "WaveRunner", "plan_waves",
 ]

@@ -6,6 +6,14 @@ pool width is the paper's "number of workers"), packed per shard into the
 fixed-shape byte-record contract, and placed shard-by-shard with
 double-buffered ``jax.device_put`` (transfer of shard *s* overlaps packing
 of shard *s+1* via :func:`repro.core.dataset.from_shard_arrays`).
+
+Pool-width default: threads only pay off when fetches *wait* (remote
+request latency).  Against zero-latency local storage, ``read_split`` is
+GIL-serialized Python record parsing, so any pool width > 1 is pure
+overhead (profiled at ~0.6x of serial at 8 workers — BENCH_ingestion.json
+pre-fix); ``workers=None`` therefore picks 1 for latency-free backends
+and ``min(32, num_splits)`` for backends that declare a request latency,
+and ``workers == 1`` bypasses the executor entirely.
 """
 from __future__ import annotations
 
@@ -30,6 +38,15 @@ def _round_up(x: int, m: int) -> int:
     return round_up(max(x, 1), m)
 
 
+def default_workers(backend, num_splits: int) -> int:
+    """Latency-aware fetch-pool width: 1 (serial) for latency-free
+    backends, up to 32 when each request waits on emulated/remote I/O."""
+    latency = float(getattr(backend, "latency_s", 0.0) or 0.0)
+    if latency <= 0.0:
+        return 1
+    return min(32, max(1, num_splits))
+
+
 def ingest(source: DataSource, mesh: Mesh, axis: str = "data",
            capacity: Optional[int] = None, width: Optional[int] = None,
            workers: Optional[int] = None,
@@ -41,15 +58,21 @@ def ingest(source: DataSource, mesh: Mesh, axis: str = "data",
     n = int(mesh.shape[axis])
     bins = assign_splits(splits, n)
     if workers is None:
-        workers = min(32, max(1, len(splits)))
+        workers = default_workers(source.backend, len(splits))
 
     backend, fmt = source.backend, source.fmt
-    with ThreadPoolExecutor(max_workers=workers) as pool:
-        # one future per split, grouped per shard in plan order
-        futs = [[pool.submit(fmt.read_split, backend, sp) for sp in b]
-                for b in bins]
+    if workers <= 1:
+        # serial fast path: no executor, no future bookkeeping
         shard_recs: List[List[bytes]] = [
-            [r for f in shard for r in f.result()] for shard in futs]
+            [r for sp in b for r in fmt.read_split(backend, sp)]
+            for b in bins]
+    else:
+        with ThreadPoolExecutor(max_workers=workers) as pool:
+            # one future per split, grouped per shard in plan order
+            futs = [[pool.submit(fmt.read_split, backend, sp) for sp in b]
+                    for b in bins]
+            shard_recs = [
+                [r for f in shard for r in f.result()] for shard in futs]
 
     max_count = max((len(r) for r in shard_recs), default=0)
     max_width = max((len(rec) for recs in shard_recs for rec in recs),

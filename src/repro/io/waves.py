@@ -8,6 +8,13 @@ with the same (required-associative+commutative) combiner in a final MaRe
 reduce, so ``collect`` over a source that never fits on device at once is
 exact.  Wave *w+1* ingestion overlaps wave *w* compute via the
 :class:`~repro.data.pipeline.Prefetcher` (one-wave lookahead buffer).
+
+Each wave executes the pipeline as ONE fused ``shard_map`` program via
+:mod:`repro.core.planner`; because ingestion buckets wave geometry
+(capacity/width rounding in :mod:`repro.io.ingest`) and the plan compile
+cache keys on (stage structure, shapes, mesh), the pipeline compiles once
+and every same-shaped wave is a cache hit — ``stats["programs_compiled"]``
+records how many distinct programs a run actually built.
 """
 from __future__ import annotations
 
@@ -17,6 +24,7 @@ import jax
 import numpy as np
 
 from repro import compat
+from repro.core import planner as planner_lib
 from repro.core.container import Registry, DEFAULT_REGISTRY
 from repro.core.mare import MaRe
 from repro.data.pipeline import Prefetcher
@@ -62,7 +70,8 @@ class WaveRunner:
                  capacity: Optional[int] = None,
                  width: Optional[int] = None,
                  registry: Registry = DEFAULT_REGISTRY,
-                 prefetch: bool = True):
+                 prefetch: bool = True,
+                 plan_cache: Optional["planner_lib.PlanCache"] = None):
         if mesh is None:
             mesh = compat.make_mesh((jax.device_count(),), (axis,))
         self.source = source
@@ -74,6 +83,7 @@ class WaveRunner:
         self.width = width
         self.registry = registry
         self.prefetch = prefetch
+        self.plan_cache = plan_cache
         self._maps: List[Dict[str, Any]] = []
         self._reduce: Optional[Dict[str, Any]] = None
         self.stats: Dict[str, Any] = {}
@@ -98,7 +108,7 @@ class WaveRunner:
         return plan_waves(self.source.splits(), self.wave_bytes)
 
     def _pipeline(self, ds) -> MaRe:
-        m = MaRe(ds, registry=self.registry)
+        m = MaRe(ds, registry=self.registry, plan_cache=self.plan_cache)
         for kw in self._maps:
             m = m.map(**kw)
         if self._reduce is not None:
@@ -124,6 +134,9 @@ class WaveRunner:
                       "num_splits": sum(len(w) for w in waves)}
         if not waves:
             raise ValueError("source produced no input splits")
+        cache = (self.plan_cache if self.plan_cache is not None
+                 else planner_lib.DEFAULT_CACHE)
+        cache_before = cache.stats()
 
         outputs: List[Any] = []
         if self.prefetch and len(waves) > 1:
@@ -140,7 +153,17 @@ class WaveRunner:
             for w in waves:
                 outputs.append(self._run_wave(self._ingest_wave(w)))
 
+        def snap_cache_stats():
+            # taken at every return so the cross-wave fold program (when
+            # it runs) is counted too
+            cache_after = cache.stats()
+            self.stats["programs_compiled"] = (cache_after["misses"]
+                                               - cache_before["misses"])
+            self.stats["program_cache_hits"] = (cache_after["hits"]
+                                                - cache_before["hits"])
+
         if len(outputs) == 1:
+            snap_cache_stats()
             return outputs[0]
 
         def cat(*ls):
@@ -156,8 +179,12 @@ class WaveRunner:
 
         stacked = jax.tree.map(cat, *outputs)
         if self._reduce is None:
+            snap_cache_stats()
             return stacked
         # fold per-wave partials with the same associative combiner
         fold = MaRe(stacked, mesh=self.mesh, axis=self.axis,
-                    registry=self.registry).reduce(**self._reduce)
-        return fold.collect_first_shard()
+                    registry=self.registry,
+                    plan_cache=self.plan_cache).reduce(**self._reduce)
+        out = fold.collect_first_shard()
+        snap_cache_stats()
+        return out

@@ -1,0 +1,223 @@
+"""Lazy stage-DAG planner: whole-pipeline fusion, compile cache,
+shuffle-overflow accounting (single device; multi-device coverage lives in
+tests/distributed/mare_e2e.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core import (MaRe, MapStage, Plan, PlanCache, ReduceStage,
+                        ShuffleStage, execute, from_host, shuffle_partition)
+from repro.core import planner as planner_lib
+from repro.core.container import ContainerOp, Partition, make_partition
+from jax.sharding import PartitionSpec as P
+
+
+def _counting_op(name="trace/counter"):
+    """An op whose fn counts how many times it is TRACED (not executed)."""
+    traces = {"n": 0}
+
+    def fn(part, **kw):
+        traces["n"] += 1
+        return part
+
+    return ContainerOp(image=name, fn=fn), traces
+
+
+def _key_mod5(recs):
+    return recs[0] % 5
+
+
+# -- laziness & fusion --------------------------------------------------------
+
+def test_chain_is_lazy_until_action():
+    op, traces = _counting_op()
+    m = (MaRe((np.arange(32, dtype=np.int32),), plan_cache=PlanCache())
+         .map(op=op)
+         .repartition_by(_key_mod5)
+         .map(op=op))
+    assert traces["n"] == 0                    # nothing traced yet
+    assert [type(s) for s in m.plan.stages] == [MapStage, ShuffleStage,
+                                                MapStage]
+    got = m.collect()
+    assert sorted(got[0].tolist()) == list(range(32))
+    assert traces["n"] == 2                    # one trace, op appears twice
+
+
+def test_whole_chain_compiles_one_program():
+    cache = PlanCache()
+    scores = np.random.default_rng(0).normal(size=64).astype(np.float32)
+    ids = np.arange(64, dtype=np.int32)
+    m = (MaRe((scores, ids), plan_cache=cache)
+         .map(image="toolbox/concat")
+         .repartition_by(lambda recs: recs[1] % 3)
+         .reduce(image="toolbox/topk", k=8))
+    _, top_ids = m.collect_first_shard()
+    true_top = set(np.argsort(-scores)[:8].tolist())
+    assert set(top_ids.tolist()) == true_top
+    assert cache.stats() == {"programs": 1, "hits": 0, "misses": 1}
+
+
+def test_fused_equals_stage_at_a_time():
+    data = (np.arange(48, dtype=np.int32),)
+
+    def run(fuse):
+        cache = PlanCache()
+        m = (MaRe(data, plan_cache=cache, fuse=fuse)
+             .map(image="toolbox/concat")
+             .repartition_by(_key_mod5)
+             .reduce(image="toolbox/sum"))
+        out = m.collect_first_shard()
+        return out, cache.stats()
+
+    fused, fused_stats = run(True)
+    eager, eager_stats = run(False)
+    np.testing.assert_array_equal(fused[0], eager[0])
+    assert fused_stats["misses"] == 1
+    assert eager_stats["misses"] == 3          # one program per stage
+
+
+# -- compile cache ------------------------------------------------------------
+
+def test_compile_cache_hits_on_identical_pipeline():
+    cache = PlanCache()
+    op, traces = _counting_op()
+    data = (np.arange(16, dtype=np.int32),)
+
+    def build():
+        return (MaRe(data, plan_cache=cache)
+                .map(op=op)
+                .repartition_by(_key_mod5))
+
+    build().collect()
+    assert cache.stats() == {"programs": 1, "hits": 0, "misses": 1}
+    first_traces = traces["n"]
+
+    build().collect()                          # fresh MaRe, same pipeline
+    assert cache.stats() == {"programs": 1, "hits": 1, "misses": 1}
+    assert traces["n"] == first_traces         # zero re-trace
+
+    # same program OBJECT is reused for the same key
+    ds = from_host(data, compat.make_mesh((1,), ("data",)))
+    plan = build().plan
+    p1 = planner_lib.compile_plan(plan, ds, cache)
+    p2 = planner_lib.compile_plan(plan, ds, cache)
+    assert p1 is p2
+
+
+def test_numpy_params_key_on_content_not_identity():
+    """Array params are baked into the traced program, so the cache must
+    key them by content: equal arrays share a program, and mutating one
+    in place misses the cache instead of serving stale constants."""
+    cache = PlanCache()
+    table = np.full((4,), 10, np.int32)
+
+    def add_table(part, table=None, **kw):
+        return make_partition((part.records[0] + jnp.asarray(table)[0],),
+                              part.count)
+
+    def run():
+        op = ContainerOp(image="t/add", fn=add_table,
+                         params={"table": table})
+        m = MaRe((np.zeros(8, np.int32),), plan_cache=cache).map(op=op)
+        return int(m.collect()[0][0])
+
+    assert run() == 10
+    assert run() == 10                         # same content -> cache hit
+    assert cache.stats()["misses"] == 1 and cache.stats()["hits"] == 1
+    table += 90                                # in-place mutation
+    assert run() == 100                        # new digest -> recompile
+    assert cache.stats()["misses"] == 2
+
+
+def test_compile_cache_misses_on_shape_or_structure_change():
+    cache = PlanCache()
+    op, _ = _counting_op()
+
+    def run(n, twice):
+        m = MaRe((np.arange(n, dtype=np.int32),), plan_cache=cache).map(op=op)
+        if twice:
+            m = m.map(op=op)
+        m.collect()
+
+    run(16, False)
+    run(32, False)                             # shape change -> new program
+    run(16, True)                              # structure change -> new one
+    assert cache.stats()["misses"] == 3
+
+
+# -- shuffle overflow ---------------------------------------------------------
+
+def test_shuffle_partition_dropped_accounting():
+    """All records hash to one destination; capacity caps what arrives and
+    the remainder is counted, never silently lost."""
+    mesh = compat.make_mesh((1,), ("data",))
+
+    def interior(records, counts):
+        part = make_partition(records, counts[0])
+        keys = jnp.zeros((part.capacity,), jnp.int32)   # all -> shard 0
+        res = shuffle_partition(part, keys, axis_name="data", axis_size=1,
+                                capacity=3)
+        return res.part.records, res.part.count[None], res.dropped[None]
+
+    fn = jax.jit(compat.shard_map(
+        interior, mesh=mesh, in_specs=(P("data"), P("data")),
+        out_specs=(P("data"), P("data"), P("data"))))
+    records = (jnp.arange(10, dtype=jnp.int32),)
+    counts = jnp.asarray([10], jnp.int32)
+    out_records, out_counts, dropped = fn(records, counts)
+    assert int(dropped[0]) == 7                # 10 sent, 3 fit
+    assert int(out_counts[0]) == 3
+    # survivors are a prefix of the stable destination order
+    assert out_records[0][:3].tolist() == [0, 1, 2]
+
+
+def test_repartition_overflow_raises_at_action():
+    # capacity=1: any source shard holding >1 record overflows its
+    # per-destination send buffer (everything keys to one destination)
+    m = (MaRe((np.arange(4 * jax.device_count(), dtype=np.int32),),
+              plan_cache=PlanCache())
+         .repartition_by(lambda recs: jnp.zeros_like(recs[0]), capacity=1))
+    with pytest.raises(RuntimeError, match="overflow"):
+        m.collect()
+
+
+def test_lossless_shuffle_never_raises():
+    m = (MaRe((np.arange(12, dtype=np.int32),), plan_cache=PlanCache())
+         .repartition_by(lambda recs: jnp.zeros_like(recs[0])))
+    got = m.collect()
+    assert sorted(got[0].tolist()) == list(range(12))
+
+
+# -- plan structure & describe ------------------------------------------------
+
+def test_plan_builder_fuses_adjacent_maps():
+    op, _ = _counting_op()
+    p = Plan().then(op).then(op).then_shuffle(_key_mod5).then(op)
+    assert [type(s) for s in p.stages] == [MapStage, ShuffleStage, MapStage]
+    assert len(p.stages[0].ops) == 2
+    assert len(p.ops) == 3                     # legacy flat view
+    assert p.num_shuffles == 1
+
+
+def test_describe_shows_stage_dag():
+    m = (MaRe((np.arange(8, dtype=np.int32),), plan_cache=PlanCache())
+         .map(image="toolbox/concat")
+         .repartition_by(_key_mod5)
+         .reduce(image="toolbox/sum", depth=1))
+    d = m.describe()
+    assert "map[toolbox/concat:latest]" in d
+    assert "shuffle" in d
+    assert "reduce[toolbox/sum:latest, depth=1]" in d
+
+
+def test_dataset_property_materializes_pending_plan():
+    op, traces = _counting_op()
+    m = MaRe((np.arange(8, dtype=np.int32),), plan_cache=PlanCache()).map(
+        op=op)
+    assert traces["n"] == 0
+    ds = m.dataset                             # action: runs the plan
+    assert traces["n"] == 1
+    assert m.plan.empty
+    assert ds.num_shards == jax.device_count()

@@ -2,6 +2,7 @@
 import numpy as np
 import pytest
 
+from repro.core import PlanCache
 from repro.io import (WaveRunner, fasta_source, make_backend, plan_waves,
                       text_source, unpack_records)
 from repro.io.splits import InputSplit
@@ -79,6 +80,34 @@ def test_single_wave_equals_multi_wave(genome):
     many, nm = run(1 << 11)
     assert n1 == 1 and nm >= 2
     assert one == many
+
+
+def test_wave_pipeline_compile_amortizes_across_runs(genome):
+    """The plan compile cache is keyed on (stage structure, shapes, mesh):
+    same-shaped waves share one program, and a second identical run
+    compiles nothing at all."""
+    path, seq = genome
+    cache = PlanCache()
+
+    def run():
+        r = (WaveRunner(fasta_source(path, split_bytes=512),
+                        wave_bytes=1 << 11, prefetch=False,
+                        plan_cache=cache)
+             .map(image="ubuntu", command="grep-chars GC")
+             .reduce(image="ubuntu", command="awk-sum"))
+        (t,) = r.collect()
+        assert int(t[0]) == seq.count("G") + seq.count("C")
+        return r.stats
+
+    s1 = run()
+    assert s1["num_waves"] >= 2
+    # same-shaped waves share a program within the first run (compiled
+    # programs: wave-pipeline shapes + the cross-wave fold)
+    assert s1["programs_compiled"] <= s1["num_waves"]
+    assert s1["program_cache_hits"] >= 1
+    s2 = run()
+    assert s2["programs_compiled"] == 0        # fully amortized
+    assert s2["program_cache_hits"] == s2["num_waves"] + 1   # waves + fold
 
 
 def test_wave_runner_rejects_map_after_reduce(genome):
