@@ -1,0 +1,209 @@
+"""k-mer statistics benchmark: map-side combiner & segment-reduce kernel.
+
+The k-mer counting workload (map ``kmer-stats`` -> ``reduce_by_key``) runs
+over the same random reads in three fused modes on an 8-device CPU mesh:
+
+* **combiner-on / kernel**  — map-side combiner, Pallas segment-reduce
+* **combiner-on / fallback** — map-side combiner, jnp scatter-add path
+* **combiner-off**           — raw ``(key, 1)`` records shuffled, merge only
+
+Invariants asserted in-script (CI policy, same as pipeline.py: fail on a
+broken invariant, never on wall-clock):
+
+* every fused mode compiles exactly ONE program, and re-executing the
+  identical pipeline is a compile-cache hit (zero re-trace);
+* the combiner reduces exchanged shuffle volume (records and bytes) vs
+  combiner-off on the same input — the arXiv:1302.2966 shuffle-volume
+  optimization, measured from the program's own exchange counters;
+* all modes produce the exact reference k-mer table.
+
+Results land in ``BENCH_kmer.json``.
+
+  PYTHONPATH=src python benchmarks/kmer.py [--small]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+import jax                                           # noqa: E402
+
+from repro.core import MaRe, PlanCache               # noqa: E402
+from repro import compat                             # noqa: E402
+
+READ_LEN = 64
+#: key + summed value + per-key record count, all int32 (the exchanged
+#: record row of a keyed reduce)
+ROW_BYTES = 12
+
+MODES = {
+    "combiner_kernel": {"combiner": True, "use_kernel": True},
+    "combiner_fallback": {"combiner": True, "use_kernel": False},
+    "no_combiner": {"combiner": False, "use_kernel": False},
+}
+
+
+def make_reads(n_reads: int, seed: int = 0) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    bases = np.frombuffer(b"ACGT", np.uint8)
+    data = bases[rng.integers(0, 4, size=(n_reads, READ_LEN))]
+    lens = np.full((n_reads,), READ_LEN, np.int32)
+    return {"data": data, "len": lens}
+
+
+def reference_table(reads: Dict[str, np.ndarray], k: int) -> Dict[int, int]:
+    lut = np.full(256, -1, np.int64)
+    for i, b in enumerate(b"ACGT"):
+        lut[b] = i
+    codes = lut[reads["data"]]
+    nw = READ_LEN - k + 1
+    acc = np.zeros((codes.shape[0], nw), np.int64)
+    ok = np.ones((codes.shape[0], nw), bool)
+    for j in range(k):
+        win = codes[:, j:j + nw]
+        acc = acc * 4 + np.maximum(win, 0)
+        ok &= win >= 0
+    keys, counts = np.unique(acc[ok], return_counts=True)
+    return {int(a): int(b) for a, b in zip(keys, counts)}
+
+
+def _key_of(recs):
+    # module-level keyBy/valueBy: the compile cache keys keyed stages on
+    # callable identity, so fresh lambdas per run would defeat it
+    return recs[0]
+
+
+def _ones_of(recs):
+    return (recs[1],)
+
+
+def build_pipeline(ds, mesh, cache: PlanCache, k: int, num_keys: int,
+                   mode: Dict) -> MaRe:
+    return (MaRe(ds, mesh=mesh, plan_cache=cache)
+            .map(image="kmer-stats", k=k)
+            .reduce_by_key(_key_of, value_by=_ones_of, op="sum",
+                           num_keys=num_keys, combiner=mode["combiner"],
+                           use_kernel=mode["use_kernel"]))
+
+
+def run_mode(ds, mesh, k: int, num_keys: int, mode: Dict,
+             expected: Dict[int, int]) -> Dict:
+    cache = PlanCache()
+    t0 = time.monotonic()
+    m = build_pipeline(ds, mesh, cache, k, num_keys, mode)
+    keys, (occ,), _ = m.collect()
+    cold = time.monotonic() - t0
+    got = {int(a): int(b) for a, b in zip(keys, occ)}
+    assert got == expected, "k-mer table mismatch vs numpy reference"
+    exchanged = m.last_diagnostics["stage1.exchanged_records"]
+    r = {
+        "compiles": cache.stats()["misses"],
+        "cold_s": cold,
+        "exchanged_records": exchanged,
+        "exchanged_bytes": exchanged * ROW_BYTES,
+        "key_overflow": m.last_diagnostics["stage1.key_overflow"],
+        "cache": cache,
+    }
+    return r
+
+
+def run_warm(ds, mesh, k: int, num_keys: int, modes: Dict[str, Dict],
+             results: Dict[str, Dict], reps: int) -> None:
+    """Interleave warm reps across modes (scheduler-noise fairness, as in
+    benchmarks/pipeline.py)."""
+    times = {name: [] for name in modes}
+    for _ in range(reps):
+        for name, mode in modes.items():
+            cache = results[name]["cache"]
+            t0 = time.monotonic()
+            build_pipeline(ds, mesh, cache, k, num_keys, mode).collect()
+            times[name].append(time.monotonic() - t0)
+    for name, r in results.items():
+        r["warm_mean_s"] = float(np.mean(times[name]))
+        r["warm_min_s"] = float(np.min(times[name]))
+        r["recompiles_on_rerun"] = r["cache"].stats()["misses"] \
+            - r["compiles"]
+        r["cache"] = r.pop("cache").stats()
+
+
+def main() -> Dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true",
+                    help="CI smoke mode: tiny dataset, few reps")
+    ap.add_argument("--out", default="BENCH_kmer.json")
+    args = ap.parse_args()
+
+    n_reads = 1_024 if args.small else 8_192
+    k = 5 if args.small else 6
+    reps = 2 if args.small else 10
+    num_keys = 4 ** k
+
+    mesh = compat.make_mesh((jax.device_count(),), ("data",))
+    reads = make_reads(n_reads)
+    expected = reference_table(reads, k)
+    ds = MaRe(reads, mesh=mesh).dataset      # shard once, time pipelines
+
+    results = {name: run_mode(ds, mesh, k, num_keys, mode, expected)
+               for name, mode in MODES.items()}
+    run_warm(ds, mesh, k, num_keys, MODES, results, reps)
+
+    on = results["combiner_kernel"]
+    off = results["no_combiner"]
+    out = {
+        "bench": "kmer",
+        "devices": jax.device_count(),
+        "n_reads": n_reads,
+        "read_len": READ_LEN,
+        "k": k,
+        "num_keys": num_keys,
+        "total_kmers": sum(expected.values()),
+        "distinct_kmers": len(expected),
+        "reps": reps,
+        **{name: r for name, r in results.items()},
+        "combiner_exchange_reduction":
+            off["exchanged_records"] / max(1, on["exchanged_records"]),
+        "kernel_vs_fallback_warm":
+            results["combiner_fallback"]["warm_min_s"]
+            / max(1e-9, results["combiner_kernel"]["warm_min_s"]),
+    }
+    for name, r in results.items():
+        print(f"kmer,{name},compiles={r['compiles']},"
+              f"exchanged={r['exchanged_records']}"
+              f"({r['exchanged_bytes']}B),cold={r['cold_s']:.3f}s,"
+              f"warm_min={r['warm_min_s']*1e3:.1f}ms,"
+              f"rerun_recompiles={r['recompiles_on_rerun']}")
+    print(f"kmer,combiner_exchange_reduction="
+          f"{out['combiner_exchange_reduction']:.2f}x")
+
+    for name, r in results.items():
+        assert r["compiles"] == 1, \
+            f"{name}: fused reduce_by_key must compile exactly 1 program," \
+            f" got {r['compiles']}"
+        assert r["recompiles_on_rerun"] == 0, \
+            f"{name}: re-run must hit the compile cache"
+        assert r["key_overflow"] == 0, f"{name}: unexpected key overflow"
+    assert on["exchanged_records"] < off["exchanged_records"], \
+        "map-side combiner must reduce exchanged records " \
+        f"({on['exchanged_records']} vs {off['exchanged_records']})"
+    assert on["exchanged_bytes"] < off["exchanged_bytes"], \
+        "map-side combiner must reduce exchanged bytes"
+
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

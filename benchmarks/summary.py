@@ -1,0 +1,60 @@
+"""Render all BENCH_*.json results as a GitHub-flavored markdown table.
+
+CI appends the output to ``$GITHUB_STEP_SUMMARY`` after the bench-smoke
+job so every run's numbers are readable from the Actions UI without
+downloading artifacts:
+
+  python benchmarks/summary.py [dir] >> "$GITHUB_STEP_SUMMARY"
+
+Top-level scalar fields of each result file become rows; nested per-mode
+dicts contribute their scalar fields as ``mode.field`` rows.  Floats are
+rounded for readability; nothing here asserts — the benchmarks themselves
+enforce their invariants in-script.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def _fmt(v) -> str:
+    if isinstance(v, bool):
+        return str(v)
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def rows_for(result: dict):
+    for key, value in result.items():
+        if isinstance(value, (int, float, str, bool)):
+            yield key, _fmt(value)
+        elif isinstance(value, dict):
+            for sub, sv in value.items():
+                if isinstance(sv, (int, float, str, bool)):
+                    yield f"{key}.{sub}", _fmt(sv)
+
+
+def main() -> int:
+    bench_dir = sys.argv[1] if len(sys.argv) > 1 else "."
+    paths = sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json")))
+    if not paths:
+        print("No BENCH_*.json results found.")
+        return 0
+    print("## Benchmark results")
+    for path in paths:
+        with open(path) as f:
+            result = json.load(f)
+        name = result.get("bench", os.path.basename(path))
+        print(f"\n### {name} (`{os.path.basename(path)}`)\n")
+        print("| metric | value |")
+        print("| --- | --- |")
+        for key, value in rows_for(result):
+            print(f"| {key} | {value} |")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,14 +11,19 @@ from repro.core.dataset import ShardedDataset, collect, from_host
 from repro.core.mare import MaRe
 from repro.core.mounts import (BinaryFiles, FileSetMount, Mount, RecordMount,
                                TextFile)
-from repro.core.plan import (MapStage, Plan, ReduceStage, ShuffleStage)
+from repro.core.plan import (KEYED_MONOIDS, KeyedReduceStage, MapStage, Plan,
+                             ReduceStage, ShuffleStage)
 from repro.core.planner import (DEFAULT_CACHE, PlanCache, compile_plan,
                                 execute, program_key)
 from repro.core.shuffle import (ShuffleResult, grouped_all_to_all, hash_keys,
-                                shuffle_partition)
+                                keyed_bucket_capacity, shuffle_partition)
 from repro.core.tree_reduce import (broadcast_from_zero, fused_allreduce,
-                                    hierarchical_allreduce, split_factors,
-                                    tree_allreduce, tree_reduce_partition)
+                                    hierarchical_allreduce,
+                                    keyed_combine_partition,
+                                    keyed_merge_partition,
+                                    segment_table_to_partition,
+                                    split_factors, tree_allreduce,
+                                    tree_reduce_partition)
 from repro.core import images as _images  # registers standard images
 
 __all__ = [
@@ -26,9 +31,13 @@ __all__ = [
     "container_op", "make_partition", "pull", "register",
     "ShardedDataset", "collect", "from_host",
     "Mount", "RecordMount", "FileSetMount", "TextFile", "BinaryFiles",
-    "Plan", "MapStage", "ShuffleStage", "ReduceStage",
+    "Plan", "MapStage", "ShuffleStage", "ReduceStage", "KeyedReduceStage",
+    "KEYED_MONOIDS",
     "PlanCache", "DEFAULT_CACHE", "compile_plan", "execute", "program_key",
     "ShuffleResult", "grouped_all_to_all", "hash_keys", "shuffle_partition",
+    "keyed_bucket_capacity",
     "broadcast_from_zero", "fused_allreduce", "hierarchical_allreduce",
     "split_factors", "tree_allreduce", "tree_reduce_partition",
+    "keyed_combine_partition", "keyed_merge_partition",
+    "segment_table_to_partition",
 ]

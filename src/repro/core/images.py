@@ -71,6 +71,62 @@ def posix(part: Partition, command: str = "", **kw: Any) -> Partition:
 
 
 # ---------------------------------------------------------------------------
+# kmer-stats: FASTA byte records -> packed k-mer keys/counts (arXiv:1807.01566
+# workload: reduce_by_key over the 4^k k-mer key space)
+# ---------------------------------------------------------------------------
+
+_BASE_CODES = {65: 0, 67: 1, 71: 2, 84: 3}   # A C G T -> 2-bit codes
+
+
+@container_op("kmer-stats")
+def kmer_stats(part: Partition, command: str = "", k: int = 8,
+               **kw: Any) -> Partition:
+    """Emit one ``(packed k-mer key, 1)`` record per k-mer occurrence.
+
+    Input: byte records ``{"data": uint8 [cap, W], "len": int32 [cap]}``
+    (the repro.io FASTA contract — each record is one sequence line, so
+    k-mers never span records).  Output records: ``(codes int32, ones
+    int32)`` with the 2-bit packing ``A=0 C=1 G=2 T=3`` (case-insensitive);
+    windows containing any other base (N, gaps) are skipped.  ``k`` comes
+    from the param or the command string (``kmer-stats 8``); ``k <= 15``
+    keeps codes within int32, and ``num_keys = 4**k`` downstream.
+    """
+    argv = shlex.split(command)
+    if len(argv) >= 2 and argv[0] == "kmer-stats":
+        k = int(argv[1])
+    elif len(argv) == 1 and argv[0].isdigit():
+        k = int(argv[0])
+    if not 1 <= k <= 15:
+        raise ValueError(f"kmer-stats needs 1 <= k <= 15, got {k}")
+    data = part.records["data"]
+    lens = part.records["len"]
+    cap, width = data.shape
+    if k > width:
+        raise ValueError(f"k={k} exceeds record width {width}")
+    nw = width - k + 1
+    upper = jnp.where((data >= 97) & (data <= 122), data - 32, data)
+    code = jnp.zeros_like(upper, dtype=jnp.int32)
+    base_ok = jnp.zeros(data.shape, bool)
+    for byte, c in _BASE_CODES.items():
+        hit = upper == byte
+        code = jnp.where(hit, c, code)
+        base_ok = base_ok | hit
+    acc = jnp.zeros((cap, nw), jnp.int32)
+    window_ok = jnp.ones((cap, nw), bool)
+    for j in range(k):
+        acc = acc * 4 + code[:, j:j + nw]
+        window_ok = window_ok & base_ok[:, j:j + nw]
+    in_len = jnp.arange(nw)[None, :] + k <= lens[:, None]
+    ok = (window_ok & in_len & part.mask()[:, None]).reshape(-1)
+    # compact valid k-mers to the front (partition count semantics)
+    order = jnp.argsort(~ok, stable=True)
+    codes = jnp.take(acc.reshape(-1), order, mode="clip")
+    total = jnp.sum(ok).astype(jnp.int32)
+    ones = (jnp.arange(cap * nw) < total).astype(jnp.int32)
+    return make_partition((codes, ones), total)
+
+
+# ---------------------------------------------------------------------------
 # Generic combinators (used by evaluation pipelines and tests)
 # ---------------------------------------------------------------------------
 

@@ -41,7 +41,25 @@ from repro.core.container import (ContainerOp, Partition, Registry,
                                   DEFAULT_REGISTRY, make_partition)
 from repro.core.dataset import ShardedDataset
 from repro.core.mounts import Mount
-from repro.core.plan import Plan
+from repro.core.plan import KEYED_MONOIDS, Plan
+
+#: Container images that double as keyed-reduce merge monoids (the paper's
+#: framing: the combiner is a container command; here the command resolves
+#: to a segment-reduce monoid instead of a per-partition ContainerOp).
+_MONOID_IMAGES = {"toolbox/sum": "sum"}
+_MONOID_COMMANDS = {"awk-sum": "sum"}
+
+
+def _resolve_monoid(image: str, command: str) -> str:
+    if image in _MONOID_IMAGES:
+        return _MONOID_IMAGES[image]
+    if image in ("posix", "ubuntu") and command in _MONOID_COMMANDS:
+        return _MONOID_COMMANDS[command]
+    raise ValueError(
+        f"image {image!r} (command {command!r}) is not a known keyed-reduce "
+        f"monoid; use op= directly ({KEYED_MONOIDS}) or one of "
+        f"{sorted(_MONOID_IMAGES)} / posix|ubuntu with "
+        f"{sorted(_MONOID_COMMANDS)}")
 
 
 def _resolve_op(image: Optional[str], op: Optional[ContainerOp],
@@ -81,6 +99,10 @@ class MaRe:
         self.plan = _plan or Plan()
         self.plan_cache = plan_cache
         self.fuse = fuse
+        #: Per-counter totals from the most recent action on THIS handle
+        #: (keyed "stage<i>.<kind>", e.g. exchanged-record volume of a
+        #: reduce_by_key — see planner.execute diagnostics).
+        self.last_diagnostics: dict = {}
 
     @classmethod
     def from_source(cls, source: Any, mesh: Optional[Mesh] = None,
@@ -104,12 +126,14 @@ class MaRe:
 
     def _materialize(self) -> ShardedDataset:
         """Run all pending stages as one fused program (memoized compile);
-        shuffle-overflow is checked once, after the single dispatch."""
+        stage counters are checked once, after the single dispatch."""
         if not self.plan.empty:
+            diag: dict = {}
             self._dataset = planner_lib.execute(
                 self._dataset, self.plan, cache=self.plan_cache,
-                fuse=self.fuse)
+                fuse=self.fuse, diagnostics=diag)
             self.plan = Plan()
+            self.last_diagnostics = diag
         return self._dataset
 
     @property
@@ -178,8 +202,52 @@ class MaRe:
         return self._chain(self.plan.then_shuffle(
             key_by, capacity=capacity, num_partitions=num_partitions))
 
-    # Paper spelling alias
+    def reduce_by_key(self, key_by: Callable[[Any], jax.Array], *,
+                      num_keys: int,
+                      op: str = "sum",
+                      value_by: Optional[Callable[[Any], Any]] = None,
+                      image: Optional[str] = None,
+                      command: str = "",
+                      combiner: bool = True,
+                      capacity: Optional[int] = None,
+                      use_kernel: Optional[bool] = None) -> "MaRe":
+        """Grouped aggregation: fold records with equal keys (lazy).
+
+        ``key_by(records) -> int array [capacity]`` computes a key per
+        record; keys must lie in ``[0, num_keys)`` (the bounded key table —
+        out-of-range keys raise ``RuntimeError`` at action time through
+        the same one-sync error channel as shuffle overflow).  ``value_by``
+        selects the value pytree to fold (default: the whole record
+        pytree); ``op`` is the merge monoid (``sum`` / ``max`` / ``min``,
+        associative+commutative by construction), or pass a container
+        spelling (``image="toolbox/sum"``, or ``image="ubuntu",
+        command="awk-sum"``) as in the paper's combiner listings.
+
+        Execution fuses into the single program like every other stage:
+        with ``combiner=True`` (default) each shard pre-aggregates per key
+        **before** the hash exchange — the classic map-side combiner — so
+        shuffle volume scales with distinct keys, not records, and the
+        per-destination send capacity is the statically-known largest hash
+        bucket.  The result partition on each shard holds the keys hashing
+        to it as records ``(key, folded_values, record_count)``, compacted
+        to the front.  The segment-reduce hot path runs the Pallas kernel
+        when available (``use_kernel`` / ``REPRO_SEGMENT_KERNEL``
+        override the backend default).
+        """
+        if num_keys is None or num_keys < 1:
+            raise ValueError(f"num_keys must be >= 1, got {num_keys}")
+        if image is not None:
+            op = _resolve_monoid(image, command)
+        if op not in KEYED_MONOIDS:
+            raise ValueError(f"unknown reduce_by_key op {op!r}; expected "
+                             f"one of {KEYED_MONOIDS}")
+        return self._chain(self.plan.then_keyed_reduce(
+            key_by, op=op, num_keys=num_keys, value_by=value_by,
+            combiner=combiner, capacity=capacity, use_kernel=use_kernel))
+
+    # Paper spelling aliases
     repartitionBy = repartition_by
+    reduceByKey = reduce_by_key
 
     # -- actions ------------------------------------------------------------
 

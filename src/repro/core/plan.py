@@ -131,7 +131,59 @@ class ReduceStage:
         return f"reduce[{self.op.name}, depth={self.depth}]"
 
 
-Stage = Union[MapStage, ShuffleStage, ReduceStage]
+#: Monoids a KeyedReduceStage can fold values with (segment-reduce table).
+KEYED_MONOIDS = ("sum", "max", "min")
+
+
+@dataclasses.dataclass(frozen=True)
+class KeyedReduceStage:
+    """Grouped aggregation: fold records with equal keys into one record.
+
+    ``key_by(records) -> int array [capacity]`` (vectorized keyBy); keys
+    must lie in ``[0, num_keys)`` — the bounded key table is the static-SPMD
+    price of sort-free aggregation, and out-of-range keys are counted into
+    the action-time error channel rather than silently dropped.
+    ``value_by`` selects the value pytree to fold (default: the whole
+    record).  With ``combiner=True`` each shard pre-aggregates its records
+    per key *before* the exchange (the classic map-side combiner), so
+    shuffle volume scales with distinct keys, not records.
+    """
+
+    key_by: Callable[[Any], jax.Array]
+    op: str
+    num_keys: int
+    value_by: Optional[Callable[[Any], Any]] = None
+    combiner: bool = True
+    capacity: Optional[int] = None
+    use_kernel: Optional[bool] = None
+
+    def signature(self) -> Tuple:
+        # key_by/value_by key on callable identity, like ShuffleStage.key_by
+        return ("keyed_reduce", self.key_by, self.value_by, self.op,
+                self.num_keys, self.combiner, self.capacity, self.use_kernel)
+
+    def describe(self) -> str:
+        comb = "on" if self.combiner else "off"
+        return (f"reduce_by_key[{self.op}, keys={self.num_keys}, "
+                f"combiner={comb}]")
+
+
+Stage = Union[MapStage, ShuffleStage, ReduceStage, KeyedReduceStage]
+
+
+#: Counter kinds that abort the action with RuntimeError when non-zero
+#: (the rest are informational diagnostics, e.g. exchanged-record volume).
+COUNTER_ERROR_KINDS = frozenset({"shuffle_dropped", "key_overflow"})
+
+
+def stage_counter_kinds(stage: Stage) -> Tuple[str, ...]:
+    """Diagnostic counters a stage contributes to the fused program's
+    output vector (one int32 scalar per shard per kind, in this order)."""
+    if isinstance(stage, ShuffleStage):
+        return ("shuffle_dropped",)
+    if isinstance(stage, KeyedReduceStage):
+        return ("key_overflow", "shuffle_dropped", "exchanged_records")
+    return ()
 
 
 @dataclasses.dataclass
@@ -156,6 +208,16 @@ class Plan:
     def then_reduce(self, op: ContainerOp, depth: int = 2) -> "Plan":
         return Plan(stages=self.stages + (ReduceStage(op, depth),))
 
+    def then_keyed_reduce(self, key_by: Callable[[Any], jax.Array],
+                          op: str, num_keys: int,
+                          value_by: Optional[Callable[[Any], Any]] = None,
+                          combiner: bool = True,
+                          capacity: Optional[int] = None,
+                          use_kernel: Optional[bool] = None) -> "Plan":
+        return Plan(stages=self.stages + (KeyedReduceStage(
+            key_by=key_by, op=op, num_keys=num_keys, value_by=value_by,
+            combiner=combiner, capacity=capacity, use_kernel=use_kernel),))
+
     @property
     def empty(self) -> bool:
         return not self.stages
@@ -168,8 +230,15 @@ class Plan:
 
     @property
     def num_shuffles(self) -> int:
-        """Shuffle stages whose overflow counter the program must output."""
+        """ShuffleStage count (legacy view; keyed stages shuffle too — the
+        program's counter-vector layout lives in :meth:`counter_specs`)."""
         return sum(isinstance(st, ShuffleStage) for st in self.stages)
+
+    def counter_specs(self) -> Tuple[Tuple[int, str], ...]:
+        """(stage_index, kind) for every diagnostic counter the fused
+        program outputs, in program-output order."""
+        return tuple((i, kind) for i, st in enumerate(self.stages)
+                     for kind in stage_counter_kinds(st))
 
     def signature(self) -> Tuple:
         """Hashable pipeline shape — the compile-cache key component."""

@@ -35,10 +35,12 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.core.container import Partition, make_partition
 from repro.core.dataset import ShardedDataset
-from repro.core.plan import (MapStage, Plan, ReduceStage, ShuffleStage,
-                             _apply_chain)
-from repro.core.shuffle import shuffle_partition
-from repro.core.tree_reduce import tree_reduce_partition
+from repro.core.plan import (COUNTER_ERROR_KINDS, KeyedReduceStage, MapStage,
+                             Plan, ReduceStage, ShuffleStage, _apply_chain)
+from repro.core.shuffle import keyed_bucket_capacity, shuffle_partition
+from repro.core.tree_reduce import (keyed_combine_partition,
+                                    keyed_merge_partition,
+                                    tree_reduce_partition)
 
 
 @dataclasses.dataclass
@@ -46,11 +48,15 @@ class CompiledProgram:
     """A jitted whole-pipeline shard_map program plus its plan metadata."""
 
     fn: Callable[..., Tuple]      # (records, counts) -> outputs
-    num_shuffles: int             # trailing overflow-vector arity
+    counters: Tuple[Tuple[int, str], ...]  # trailing counter-vector layout
     key: Hashable                 # cache key it was compiled under
 
     def __call__(self, records: Any, counts: jax.Array) -> Tuple:
         return self.fn(records, counts)
+
+    @property
+    def num_counters(self) -> int:
+        return len(self.counters)
 
 
 class PlanCache:
@@ -116,11 +122,55 @@ def program_key(plan: Plan, ds: ShardedDataset) -> Hashable:
             ds.mesh, ds.axis)
 
 
+def _apply_keyed(stage: KeyedReduceStage, part: Partition, axis: str,
+                 axis_size: int) -> Tuple[Partition, List[jax.Array]]:
+    """Shard-interior keyed aggregation: (combine) -> exchange -> merge.
+
+    With the map-side combiner on, each shard first folds its records into
+    at most ``num_keys`` per-key partials, so the exchange moves distinct
+    keys, not records, and the per-destination send capacity is the
+    statically known largest hash bucket (exact-lossless).  Combiner off
+    ships raw ``(key, value, 1)`` records with the input capacity — the
+    shuffle-volume baseline benchmarks compare against.
+    """
+    keys = jnp.asarray(stage.key_by(part.records)).astype(jnp.int32)
+    values = (stage.value_by(part.records) if stage.value_by is not None
+              else part.records)
+    valid = part.mask()
+    num_keys = stage.num_keys
+    if stage.combiner:
+        send, overflow = keyed_combine_partition(
+            keys, values, valid, num_keys, op=stage.op,
+            use_kernel=stage.use_kernel)
+        default_cap = keyed_bucket_capacity(num_keys, axis_size)
+    else:
+        in_range = (keys >= 0) & (keys < num_keys)
+        ok = valid & in_range
+        overflow = jnp.sum(valid & ~in_range).astype(jnp.int32)
+        # compact surviving records to the front (count semantics)
+        order = jnp.argsort(~ok, stable=True)
+        recs = (jnp.take(keys, order, mode="clip"),
+                jax.tree.map(lambda l: jnp.take(l, order, axis=0,
+                                                mode="clip"), values),
+                jnp.take(ok.astype(jnp.int32), order, mode="clip"))
+        send = make_partition(recs, jnp.sum(ok).astype(jnp.int32))
+        default_cap = part.capacity    # any shard may ship every record
+    cap = stage.capacity or default_cap
+    res = shuffle_partition(send, send.records[0], axis_name=axis,
+                            axis_size=axis_size, capacity=cap)
+    exchanged = jnp.sum(res.send_counts).astype(jnp.int32)
+    out, merge_overflow = keyed_merge_partition(
+        res.part, num_keys, op=stage.op, use_kernel=stage.use_kernel)
+    return out, [(overflow + merge_overflow).astype(jnp.int32),
+                 res.dropped.astype(jnp.int32), exchanged]
+
+
 def _apply_stage(stage, part: Partition, axis: str, axis_size: int
-                 ) -> Tuple[Partition, Optional[jax.Array]]:
-    """Shard-interior application of one stage; returns (part, dropped?)."""
+                 ) -> Tuple[Partition, List[jax.Array]]:
+    """Shard-interior application of one stage; returns ``(part,
+    counters)`` with counters matching ``stage_counter_kinds(stage)``."""
     if isinstance(stage, MapStage):
-        return _apply_chain(stage.ops, part.records, part.count), None
+        return _apply_chain(stage.ops, part.records, part.count), []
     if isinstance(stage, ShuffleStage):
         keys = stage.key_by(part.records)
         if (stage.num_partitions is not None
@@ -129,36 +179,48 @@ def _apply_stage(stage, part: Partition, axis: str, axis_size: int
         res = shuffle_partition(part, keys, axis_name=axis,
                                 axis_size=axis_size,
                                 capacity=stage.capacity)
-        return res.part, res.dropped
+        return res.part, [res.dropped.astype(jnp.int32)]
+    if isinstance(stage, KeyedReduceStage):
+        return _apply_keyed(stage, part, axis, axis_size)
     if isinstance(stage, ReduceStage):
         part = tree_reduce_partition(
             part, stage.op, axis_name=axis, axis_size=axis_size,
             depth=stage.depth)
-        return part, None
+        return part, []
     raise TypeError(f"unknown stage type {type(stage).__name__}")
 
 
 def lower(plan: Plan, axis: str, axis_size: int):
     """Build the shard-interior function for a whole plan.
 
-    Returns ``interior(records, counts) -> (records, counts[, dropped])``
-    where ``dropped`` is a ``[num_shuffles]`` int32 vector (omitted when
-    the plan has no shuffle stage).
+    Returns ``interior(records, counts) -> (records, counts[, counters])``
+    where ``counters`` is an int32 vector laid out per
+    ``plan.counter_specs()`` (omitted when the plan has none): shuffle
+    drop counts, keyed-reduce key-table overflow, exchanged-record volume.
     """
 
     def interior(records, counts):
         part = make_partition(records, counts[0])
-        dropped: List[jax.Array] = []
+        counters: List[jax.Array] = []
         for stage in plan.stages:
-            part, d = _apply_stage(stage, part, axis, axis_size)
-            if d is not None:
-                dropped.append(d)
+            part, cs = _apply_stage(stage, part, axis, axis_size)
+            counters.extend(cs)
         outs = (part.records, part.count[None])
-        if dropped:
-            outs = outs + (jnp.stack(dropped).astype(jnp.int32),)
+        if counters:
+            outs = outs + (jnp.stack(counters).astype(jnp.int32),)
         return outs
 
     return interior
+
+
+def _plan_uses_pallas(plan: Plan) -> bool:
+    """Whether any keyed stage resolves to the Pallas segment-reduce kernel
+    (shard_map has no replication rule for pallas_call, so the program must
+    be built with the replication check off)."""
+    from repro.kernels.segment_reduce.ops import resolve_use_kernel
+    return any(isinstance(st, KeyedReduceStage)
+               and resolve_use_kernel(st.use_kernel, st.op)
+               for st in plan.stages)
 
 
 def compile_plan(plan: Plan, ds: ShardedDataset,
@@ -169,54 +231,84 @@ def compile_plan(plan: Plan, ds: ShardedDataset,
     key = program_key(plan, ds)
 
     def build() -> CompiledProgram:
-        num_shuffles = plan.num_shuffles
+        counters = plan.counter_specs()
         interior = lower(plan, axis, int(mesh.shape[axis]))
-        out_specs = (P(axis), P(axis)) + ((P(axis),) if num_shuffles else ())
+        out_specs = (P(axis), P(axis)) + ((P(axis),) if counters else ())
+        check_vma = False if _plan_uses_pallas(plan) else None
         fn = jax.jit(compat.shard_map(
             interior, mesh=mesh, in_specs=(P(axis), P(axis)),
-            out_specs=out_specs))
-        return CompiledProgram(fn=fn, num_shuffles=num_shuffles, key=key)
+            out_specs=out_specs, check_vma=check_vma))
+        return CompiledProgram(fn=fn, counters=counters, key=key)
 
     return cache.get_or_compile(key, build)
 
 
-def _check_overflow(dropped: jax.Array, num_shuffles: int,
-                    num_shards: int) -> None:
-    """One host sync for ALL shuffle stages, after the single dispatch."""
-    per_stage = np.asarray(jax.device_get(dropped)).reshape(
-        num_shards, num_shuffles).sum(axis=0)
-    total = int(per_stage.sum())
-    if total:
-        worst = int(per_stage.argmax())
+def _check_counters(counter_vec: jax.Array,
+                    specs: Tuple[Tuple[int, str], ...], num_shards: int,
+                    diagnostics: Optional[Dict[str, int]] = None) -> None:
+    """One host sync for ALL stage counters, after the single dispatch.
+
+    Error kinds (shuffle drops, keyed overflow) raise; informational kinds
+    land in ``diagnostics`` (as do the error kinds, keyed
+    ``"stage<i>.<kind>"``) for benchmarks and post-mortems.
+    """
+    per = np.asarray(jax.device_get(counter_vec)).reshape(
+        num_shards, len(specs)).sum(axis=0)
+    if diagnostics is not None:
+        for (stage_idx, kind), total in zip(specs, per):
+            diagnostics[f"stage{stage_idx}.{kind}"] = int(total)
+    drops = [(stage_idx, int(total)) for (stage_idx, kind), total
+             in zip(specs, per) if kind == "shuffle_dropped" and total]
+    if drops:
+        total = sum(t for _, t in drops)
         raise RuntimeError(
             f"repartition_by overflow: {total} records dropped "
-            f"(per shuffle stage: {per_stage.tolist()}, worst stage "
-            f"#{worst}); raise `capacity` (paper analogue: partition "
-            "exceeded tmpfs capacity — fall back to a larger staging area)")
+            f"(per stage: {drops}); raise `capacity` (paper analogue: "
+            "partition exceeded tmpfs capacity — fall back to a larger "
+            "staging area)")
+    key_ovf = [(stage_idx, int(total)) for (stage_idx, kind), total
+               in zip(specs, per) if kind == "key_overflow" and total]
+    if key_ovf:
+        total = sum(t for _, t in key_ovf)
+        raise RuntimeError(
+            f"reduce_by_key key-table overflow: {total} records had keys "
+            f"outside [0, num_keys) (per stage: {key_ovf}); raise "
+            "`num_keys` or fix `key_by`")
 
 
 def execute(ds: ShardedDataset, plan: Plan, *,
             cache: Optional[PlanCache] = None,
-            fuse: bool = True) -> ShardedDataset:
+            fuse: bool = True,
+            diagnostics: Optional[Dict[str, int]] = None) -> ShardedDataset:
     """Run a whole plan against a dataset.
 
     ``fuse=True`` (default): one compiled program for the entire DAG;
-    shuffle-overflow counters come back as outputs of that program and
-    are checked once.  ``fuse=False``: stage-at-a-time execution (each
-    stage its own program, overflow synced after each shuffle) — the
-    pre-planner schedule, kept for debugging and benchmarking.
+    stage counters (shuffle overflow, keyed-reduce key overflow, exchange
+    volume) come back as outputs of that program and are checked once.
+    ``fuse=False``: stage-at-a-time execution (each stage its own program,
+    counters synced after each stage) — the pre-planner schedule, kept for
+    debugging and benchmarking.  ``diagnostics``, when given, is filled
+    with per-counter totals keyed ``"stage<i>.<kind>"``.
     """
     if plan.empty:
         return ds
     if not fuse:
-        for stage in plan.stages:
-            ds = execute(ds, Plan(stages=(stage,)), cache=cache, fuse=True)
+        for i, stage in enumerate(plan.stages):
+            sub: Optional[Dict[str, int]] = \
+                {} if diagnostics is not None else None
+            ds = execute(ds, Plan(stages=(stage,)), cache=cache, fuse=True,
+                         diagnostics=sub)
+            if sub:
+                diagnostics.update(
+                    (k.replace("stage0.", f"stage{i}.", 1), v)
+                    for k, v in sub.items())
         return ds
     prog = compile_plan(plan, ds, cache)
     outs = prog(ds.records, ds.counts)
-    if prog.num_shuffles:
-        out_records, out_counts, dropped = outs
-        _check_overflow(dropped, prog.num_shuffles, ds.num_shards)
+    if prog.num_counters:
+        out_records, out_counts, counter_vec = outs
+        _check_counters(counter_vec, prog.counters, ds.num_shards,
+                        diagnostics)
     else:
         out_records, out_counts = outs
     return ShardedDataset(records=out_records, counts=out_counts,

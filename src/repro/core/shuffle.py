@@ -18,6 +18,7 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.container import Partition, make_partition
 
@@ -30,6 +31,29 @@ def hash_keys(keys: jax.Array) -> jax.Array:
     x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
     x = x ^ (x >> 16)
     return x
+
+
+def keyed_bucket_capacity(num_keys: int, axis_size: int) -> int:
+    """Exact-lossless per-destination send capacity for a *combined* keyed
+    exchange: the hash partitioner is deterministic and the key space is
+    bounded, so the largest destination bucket over ``range(num_keys)`` is
+    computable statically on the host.  A combiner-side shard sends at most
+    one record per distinct key, hence at most this many to any shard —
+    typically ~``num_keys / axis_size`` instead of the worst-case
+    ``num_keys`` a dynamic bound would have to assume.  Runs chunked so a
+    4**15-sized key space costs MiBs of host scratch, not GiBs.  (Host-side
+    mirror of :func:`hash_keys`; keep the two in lockstep.)"""
+    mask = np.uint64(0xFFFFFFFF)
+    buckets = np.zeros((axis_size,), np.int64)
+    chunk = 1 << 22
+    for start in range(0, num_keys, chunk):
+        x = np.arange(start, min(start + chunk, num_keys), dtype=np.uint64)
+        x = ((x ^ (x >> np.uint64(16))) * np.uint64(0x7FEB352D)) & mask
+        x = ((x ^ (x >> np.uint64(15))) * np.uint64(0x846CA68B)) & mask
+        x = x ^ (x >> np.uint64(16))
+        dest = (x % np.uint64(axis_size)).astype(np.int64)
+        buckets += np.bincount(dest, minlength=axis_size)
+    return max(1, int(buckets.max()))
 
 
 class ShuffleResult(NamedTuple):

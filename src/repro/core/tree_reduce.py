@@ -193,6 +193,63 @@ def tree_reduce_partition(
 
 
 # ---------------------------------------------------------------------------
+# Keyed aggregation (the MaRe.reduce_by_key primitive, shard_map interior)
+# ---------------------------------------------------------------------------
+
+def segment_table_to_partition(tables: Any, counts: jax.Array,
+                               num_keys: int) -> Partition:
+    """Compact a direct-indexed key table into partition records.
+
+    Present keys (``counts > 0``) move to the front; output records are the
+    3-tuple ``(keys int32, values pytree, counts int32)`` with
+    ``count = #present`` — the record layout keyed stages exchange and
+    ultimately return to the user.
+    """
+    present = counts > 0
+    order = jnp.argsort(~present, stable=True)   # present keys first
+    keys = order.astype(jnp.int32)               # table index IS the key
+    vals = jax.tree.map(
+        lambda t: jnp.take(t, order, axis=0, mode="clip"), tables)
+    cnts = jnp.take(counts, order, mode="clip")
+    return make_partition((keys, vals, cnts),
+                          jnp.sum(present).astype(jnp.int32))
+
+
+def keyed_combine_partition(keys: jax.Array, values: Any,
+                            valid: jax.Array, num_keys: int,
+                            op: str = "sum",
+                            use_kernel: Optional[bool] = None):
+    """Map-side combiner: locally fold (key, value) records into at most
+    ``num_keys`` partial-aggregate records.  Returns ``(partition,
+    overflow)`` where overflow counts valid records whose key fell outside
+    ``[0, num_keys)`` (surfaced at action time, never silently dropped)."""
+    from repro.kernels.segment_reduce.ops import segment_reduce
+    res = segment_reduce(keys, values, num_keys, op=op, valid=valid,
+                         use_kernel=use_kernel)
+    return (segment_table_to_partition(res.values, res.counts, num_keys),
+            res.overflow)
+
+
+def keyed_merge_partition(part: Partition, num_keys: int,
+                          op: str = "sum",
+                          use_kernel: Optional[bool] = None):
+    """Post-shuffle merge: fold received ``(keys, values, counts)`` partial
+    aggregates into final per-key records on the owning shard.  Per-key
+    record counts always merge with ``sum`` (they count source records, not
+    values).  Returns ``(partition, overflow)``."""
+    from repro.kernels.segment_reduce.ops import segment_reduce
+    rkeys, rvalues, rcounts = part.records
+    mask = part.mask()
+    merged = segment_reduce(rkeys, rvalues, num_keys, op=op, valid=mask,
+                            use_kernel=use_kernel)
+    counts = segment_reduce(rkeys, (rcounts,), num_keys, op="sum",
+                            valid=mask, use_kernel=False)
+    out = segment_table_to_partition(merged.values, counts.values[0],
+                                     num_keys)
+    return out, merged.overflow
+
+
+# ---------------------------------------------------------------------------
 # Dense-gradient tree all-reduce (the trainer's paper-faithful grad sync)
 # ---------------------------------------------------------------------------
 

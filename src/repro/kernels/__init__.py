@@ -5,13 +5,16 @@ topk_reduce     — streaming top-k (MaRe reduce combiner, VS pipeline)
 rmsnorm         — fused norm (memory-bound layer fusion)
 moe_dispatch    — repartitionBy pack step (MoE expert dispatch)
 ssm_scan        — fused selective scan (SSM/hybrid recurrence hot-spot)
+segment_reduce  — bounded-key-table scatter-accumulate (reduce_by_key)
 """
 from repro.kernels.flash_attention.ops import attention_ref, flash_attention
 from repro.kernels.moe_dispatch.ops import dispatch_ref, moe_dispatch
 from repro.kernels.rmsnorm.ops import rmsnorm, rmsnorm_ref
+from repro.kernels.segment_reduce.ops import segment_reduce, segment_reduce_ref
 from repro.kernels.ssm_scan.ops import ssm_scan_fused, ssm_scan_ref
 from repro.kernels.topk_reduce.ops import topk_ref, topk_reduce
 
 __all__ = ["flash_attention", "attention_ref", "topk_reduce", "topk_ref",
            "rmsnorm", "rmsnorm_ref", "moe_dispatch", "dispatch_ref",
-           "ssm_scan_fused", "ssm_scan_ref"]
+           "ssm_scan_fused", "ssm_scan_ref", "segment_reduce",
+           "segment_reduce_ref"]

@@ -1,0 +1,8 @@
+from repro.kernels.segment_reduce.ops import (MONOIDS, SegmentReduceResult,
+                                              monoid_identity,
+                                              resolve_use_kernel,
+                                              segment_reduce,
+                                              segment_reduce_ref)
+
+__all__ = ["segment_reduce", "segment_reduce_ref", "resolve_use_kernel",
+           "SegmentReduceResult", "MONOIDS", "monoid_identity"]

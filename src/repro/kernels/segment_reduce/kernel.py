@@ -1,0 +1,103 @@
+"""Segment-sum Pallas kernel — the ``reduce_by_key`` combiner hot-spot.
+
+Sort-free scatter-accumulate over a bounded key table: record blocks are
+staged HBM->VMEM; the running ``[num_keys, d]`` aggregate table lives in
+VMEM scratch across the (sequential) block grid.  Each step expands the
+block's keys into a one-hot ``[block, num_keys]`` matrix and accumulates
+``one_hot.T @ values`` into the table — scatter re-expressed as an MXU
+matmul, the same no-data-dependent-gather discipline as the top-k kernel
+(XLA's scatter expander is the measured memory hog this avoids).  Validity
+is masked like ``Partition.mask``: slots beyond the partition count and
+keys outside ``[0, num_keys)`` contribute nothing, and out-of-range keys
+are tallied into an SMEM overflow counter instead of corrupting rows.
+
+VMEM working set: block keys/values + the table — block=512, num_keys=4096,
+d=1 f32 is ~48 KiB.  Sum only (max/min fall back to the jnp reference).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import cdiv, tpu_compiler_params
+
+
+def _segment_sum_kernel(keys_ref, vals_ref, mask_ref,
+                        out_tab_ref, out_cnt_ref, out_ovf_ref,
+                        tab_ref, cnt_ref, ovf_ref, *,
+                        block: int, n: int, num_keys: int, num_blocks: int):
+    bi = pl.program_id(0)
+
+    @pl.when(bi == 0)
+    def _init():
+        tab_ref[...] = jnp.zeros_like(tab_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        ovf_ref[0] = jnp.int32(0)
+
+    keys = keys_ref[...]                                  # [block] i32
+    ridx = bi * block + jax.lax.broadcasted_iota(jnp.int32, (block,), 0)
+    valid = (ridx < n) & (mask_ref[...] != 0)
+    in_range = (keys >= 0) & (keys < num_keys)
+    ok = valid & in_range
+    ovf_ref[0] += jnp.sum(valid & ~in_range).astype(jnp.int32)
+
+    kid = jax.lax.broadcasted_iota(jnp.int32, (block, num_keys), 1)
+    one_hot = (keys[:, None] == kid) & ok[:, None]        # [block, num_keys]
+    # zero masked-out rows: grid padding reads garbage (NaN poisons 0*x)
+    vals = jnp.where(ok[:, None], vals_ref[...], 0)       # [block, d]
+    tab_ref[...] += jax.lax.dot_general(
+        one_hot.astype(vals.dtype), vals,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=tab_ref.dtype)             # [num_keys, d]
+    cnt_ref[...] += jnp.sum(one_hot.astype(jnp.int32), axis=0)
+
+    @pl.when(bi == num_blocks - 1)
+    def _finalize():
+        out_tab_ref[...] = tab_ref[...]
+        out_cnt_ref[...] = cnt_ref[...]
+        out_ovf_ref[0] = ovf_ref[0]
+
+
+def segment_sum_kernel(keys: jnp.ndarray, values: jnp.ndarray,
+                       num_keys: int, valid: jnp.ndarray,
+                       block: int = 512, interpret: bool = True):
+    """keys [n] i32, values [n, d], valid [n] bool -> (table [num_keys, d],
+    counts [num_keys] i32, overflow [1] i32)."""
+    n = keys.shape[0]
+    d = values.shape[1]
+    block = min(block, max(8, n))
+    nb = cdiv(n, block)
+    kernel = functools.partial(_segment_sum_kernel, block=block, n=n,
+                               num_keys=num_keys, num_blocks=nb)
+    mask = jnp.asarray(valid).astype(jnp.int32)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda b: (b,)),
+            pl.BlockSpec((block, d), lambda b: (b, 0)),
+            pl.BlockSpec((block,), lambda b: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((num_keys, d), lambda b: (0, 0)),
+            pl.BlockSpec((num_keys,), lambda b: (0,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_keys, d), values.dtype),
+            jax.ShapeDtypeStruct((num_keys,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((num_keys, d), values.dtype),
+            pltpu.VMEM((num_keys,), jnp.int32),
+            pltpu.SMEM((1,), jnp.int32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(keys.astype(jnp.int32), values, mask)

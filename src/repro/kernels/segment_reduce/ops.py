@@ -1,0 +1,71 @@
+"""jit'd wrapper for segment reduce: Pallas kernel with a lax fallback.
+
+``segment_reduce`` is the keyed-aggregation primitive behind
+``MaRe.reduce_by_key``: both the map-side combiner (pre-shuffle) and the
+post-shuffle merge scatter records into a bounded ``[num_keys, ...]`` key
+table.  Dispatch policy: the Pallas kernel covers the ``sum`` monoid (the
+hot path — k-mer counting, word-count-style aggregations) and is on by
+default on TPU; max/min and non-TPU backends take the jnp reference path.
+``REPRO_SEGMENT_KERNEL=1/0`` overrides, and ``use_kernel=`` overrides both.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.segment_reduce.kernel import segment_sum_kernel
+from repro.kernels.segment_reduce.ref import (MONOIDS, SegmentReduceResult,
+                                              monoid_identity,
+                                              segment_reduce_ref)
+
+
+def resolve_use_kernel(explicit: Optional[bool], op: str) -> bool:
+    """The dispatch policy (kernel supports sum only)."""
+    if op != "sum":
+        return False
+    if explicit is not None:
+        return explicit
+    env = os.environ.get("REPRO_SEGMENT_KERNEL")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("num_keys", "op", "use_kernel",
+                                             "block", "interpret"))
+def segment_reduce(keys: jnp.ndarray, values: Any, num_keys: int,
+                   op: str = "sum",
+                   valid: Optional[jnp.ndarray] = None,
+                   use_kernel: Optional[bool] = None,
+                   block: int = 512,
+                   interpret: Optional[bool] = None) -> SegmentReduceResult:
+    """Aggregate ``values`` ([n, ...] pytree) per key into a
+    ``[num_keys, ...]`` table; see :func:`segment_reduce_ref` for semantics.
+    """
+    if valid is None:
+        valid = jnp.ones((keys.shape[0],), bool)
+    leaves, treedef = jax.tree.flatten(values)
+    if not resolve_use_kernel(use_kernel, op) or not leaves:
+        return segment_reduce_ref(keys, values, num_keys, op=op, valid=valid)
+    interp = use_interpret() if interpret is None else interpret
+    tables = []
+    counts = overflow = None
+    for leaf in leaves:
+        tail = leaf.shape[1:]
+        flat = leaf.reshape(leaf.shape[0], -1) if leaf.ndim != 2 else leaf
+        tab, cnt, ovf = segment_sum_kernel(keys, flat, num_keys, valid,
+                                           block=block, interpret=interp)
+        tables.append(tab.reshape((num_keys,) + tail))
+        if counts is None:
+            counts, overflow = cnt, ovf[0]
+    return SegmentReduceResult(values=jax.tree.unflatten(treedef, tables),
+                               counts=counts, overflow=overflow)
+
+
+__all__ = ["segment_reduce", "segment_reduce_ref", "resolve_use_kernel",
+           "SegmentReduceResult", "MONOIDS", "monoid_identity"]

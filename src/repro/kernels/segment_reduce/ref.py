@@ -1,0 +1,78 @@
+"""Pure-jnp segment-reduce oracle (and the non-kernel fallback path).
+
+Aggregates records into a bounded, direct-indexed key table: record ``i``
+with key ``k`` contributes ``values[i]`` to table row ``k`` under a monoid
+(sum / max / min).  Records whose key falls outside ``[0, num_keys)`` are
+*counted* into an overflow scalar and excluded from the table — the caller
+surfaces the counter through the planner's one-sync-per-action error
+channel instead of silently corrupting rows.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+MONOIDS = ("sum", "max", "min")
+
+
+class SegmentReduceResult(NamedTuple):
+    values: Any             # pytree of [num_keys, ...] aggregate tables
+    counts: jnp.ndarray     # [num_keys] int32, records folded into each key
+    overflow: jnp.ndarray   # int32 scalar, valid records with out-of-range keys
+
+
+def monoid_identity(op: str, dtype) -> jnp.ndarray:
+    if op == "sum":
+        return jnp.zeros((), dtype)
+    if op == "max":
+        return (jnp.asarray(-jnp.inf, dtype)
+                if jnp.issubdtype(dtype, jnp.floating)
+                else jnp.asarray(jnp.iinfo(dtype).min, dtype))
+    if op == "min":
+        return (jnp.asarray(jnp.inf, dtype)
+                if jnp.issubdtype(dtype, jnp.floating)
+                else jnp.asarray(jnp.iinfo(dtype).max, dtype))
+    raise ValueError(f"unknown segment-reduce op {op!r}; expected {MONOIDS}")
+
+
+def segment_reduce_ref(keys: jnp.ndarray, values: Any, num_keys: int,
+                       op: str = "sum",
+                       valid: Optional[jnp.ndarray] = None
+                       ) -> SegmentReduceResult:
+    """Scatter-accumulate ``values`` into a ``[num_keys, ...]`` table.
+
+    ``keys``: int [n]; ``values``: pytree of ``[n, ...]`` arrays; ``valid``:
+    bool [n] (entries beyond a partition's count).  Rows of absent keys hold
+    the monoid identity; use ``counts > 0`` to find present keys.
+    """
+    if op not in MONOIDS:
+        raise ValueError(f"unknown segment-reduce op {op!r}; "
+                         f"expected {MONOIDS}")
+    n = keys.shape[0]
+    keys = keys.astype(jnp.int32)
+    if valid is None:
+        valid = jnp.ones((n,), bool)
+    in_range = (keys >= 0) & (keys < num_keys)
+    ok = valid & in_range
+    overflow = jnp.sum(valid & ~in_range).astype(jnp.int32)
+    # out-of-range / invalid records scatter to a sentinel row, sliced off
+    idx = jnp.where(ok, keys, num_keys)
+    counts = jnp.zeros((num_keys + 1,), jnp.int32).at[idx].add(1)[:num_keys]
+
+    def reduce_leaf(leaf):
+        ident = monoid_identity(op, leaf.dtype)
+        okb = ok.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        contrib = jnp.where(okb, leaf, ident)
+        tab = jnp.full((num_keys + 1,) + leaf.shape[1:], ident, leaf.dtype)
+        if op == "sum":
+            tab = tab.at[idx].add(contrib)
+        elif op == "max":
+            tab = tab.at[idx].max(contrib)
+        else:
+            tab = tab.at[idx].min(contrib)
+        return tab[:num_keys]
+
+    return SegmentReduceResult(values=jax.tree.map(reduce_leaf, values),
+                               counts=counts, overflow=overflow)

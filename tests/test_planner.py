@@ -1,14 +1,17 @@
 """Lazy stage-DAG planner: whole-pipeline fusion, compile cache,
-shuffle-overflow accounting (single device; multi-device coverage lives in
-tests/distributed/mare_e2e.py)."""
+shuffle-overflow accounting, keyed aggregation (single device; multi-device
+coverage lives in tests/distributed/mare_e2e.py)."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro import compat
-from repro.core import (MaRe, MapStage, Plan, PlanCache, ReduceStage,
-                        ShuffleStage, execute, from_host, shuffle_partition)
+from repro.core import (KeyedReduceStage, MaRe, MapStage, Plan, PlanCache,
+                        ReduceStage, ShuffleStage, execute, from_host,
+                        hash_keys, keyed_bucket_capacity, shuffle_partition)
 from repro.core import planner as planner_lib
 from repro.core.container import ContainerOp, Partition, make_partition
 from jax.sharding import PartitionSpec as P
@@ -190,6 +193,164 @@ def test_lossless_shuffle_never_raises():
     assert sorted(got[0].tolist()) == list(range(12))
 
 
+# -- keyed aggregation (reduce_by_key) ---------------------------------------
+
+def _kv_data(n=64, num_keys=8, seed=0):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, num_keys, size=n).astype(np.int32)
+    vals = rng.normal(size=n).astype(np.float32)
+    return keys, vals
+
+
+def _key_first(recs):
+    return recs[0]
+
+
+def _val_second(recs):
+    return (recs[1],)
+
+
+def _expected_groupby(keys, vals):
+    return {int(k): (float(vals[keys == k].sum()), int((keys == k).sum()))
+            for k in np.unique(keys)}
+
+
+def _keyed(data, num_keys=8, cache=None, **kw):
+    # NB `or` would discard an empty cache: PlanCache.__len__ makes it falsy
+    cache = cache if cache is not None else PlanCache()
+    return MaRe(data, plan_cache=cache).reduce_by_key(
+        _key_first, value_by=_val_second, op="sum", num_keys=num_keys, **kw)
+
+
+@pytest.mark.parametrize("combiner", [True, False])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_reduce_by_key_matches_groupby(combiner, use_kernel):
+    keys, vals = _kv_data()
+    m = _keyed((keys, vals), combiner=combiner, use_kernel=use_kernel)
+    out_keys, (out_sum,), out_cnt = m.collect()
+    got = {int(k): (float(s), int(c))
+           for k, s, c in zip(out_keys, out_sum, out_cnt)}
+    exp = _expected_groupby(keys, vals)
+    assert set(got) == set(exp)
+    for k, (s, c) in exp.items():
+        assert got[k][1] == c
+        assert abs(got[k][0] - s) < 1e-4
+
+
+def test_reduce_by_key_combiner_shrinks_exchange():
+    keys, vals = _kv_data(n=256, num_keys=4)
+    on = _keyed((keys, vals), num_keys=4, combiner=True)
+    on.collect()
+    off = _keyed((keys, vals), num_keys=4, combiner=False)
+    off.collect()
+    ex_on = on.last_diagnostics["stage0.exchanged_records"]
+    ex_off = off.last_diagnostics["stage0.exchanged_records"]
+    assert ex_off == 256                   # every record crosses the wire
+    # at most one partial per key per shard (CI runs 8 simulated devices)
+    assert ex_on <= 4 * jax.device_count()
+    assert ex_on < ex_off
+    assert on.last_diagnostics["stage0.key_overflow"] == 0
+
+
+def test_reduce_by_key_is_lazy_and_fuses_to_one_program():
+    keys, vals = _kv_data()
+    cache = PlanCache()
+    m = (MaRe((keys, vals), plan_cache=cache)
+         .map(image="toolbox/concat")
+         .reduce_by_key(_key_first, value_by=_val_second, op="sum",
+                        num_keys=8))
+    assert [type(s) for s in m.plan.stages] == [MapStage, KeyedReduceStage]
+    assert cache.stats()["misses"] == 0    # nothing compiled yet
+    m.collect()
+    assert cache.stats() == {"programs": 1, "hits": 0, "misses": 1}
+
+
+def test_reduce_by_key_cache_hit_on_rerun():
+    keys, vals = _kv_data()
+    cache = PlanCache()
+    _keyed((keys, vals), cache=cache).collect()
+    _keyed((keys, vals), cache=cache).collect()
+    assert cache.stats() == {"programs": 1, "hits": 1, "misses": 1}
+
+
+def test_reduce_by_key_max_monoid():
+    keys, vals = _kv_data()
+    m = MaRe((keys, vals), plan_cache=PlanCache()).reduce_by_key(
+        _key_first, value_by=_val_second, op="max", num_keys=8)
+    out_keys, (out_max,), _ = m.collect()
+    for k, v in zip(out_keys, out_max):
+        assert abs(float(v) - float(vals[keys == int(k)].max())) < 1e-6
+
+
+def test_reduce_by_key_single_distinct_key():
+    vals = np.arange(16, dtype=np.float32)
+    keys = np.full(16, 3, np.int32)
+    m = _keyed((keys, vals), num_keys=8)
+    out_keys, (out_sum,), out_cnt = m.collect()
+    assert out_keys.tolist() == [3]
+    assert out_cnt.tolist() == [16]
+    assert float(out_sum[0]) == float(vals.sum())
+
+
+def test_reduce_by_key_empty_partitions():
+    mesh = compat.make_mesh((jax.device_count(),), ("data",))
+    ds = from_host((np.zeros(0, np.int32), np.zeros(0, np.float32)),
+                   mesh, capacity=8)
+    m = MaRe(ds).reduce_by_key(_key_first, value_by=_val_second, op="sum",
+                               num_keys=8)
+    out_keys, (out_sum,), out_cnt = m.collect()
+    assert out_keys.shape[0] == 0 and out_cnt.shape[0] == 0
+
+
+def test_reduce_by_key_all_records_masked_out():
+    keys, vals = _kv_data(n=16)
+    mesh = compat.make_mesh((jax.device_count(),), ("data",))
+    ds = from_host((keys, vals), mesh)
+    ds = dataclasses.replace(ds, counts=ds.counts * 0)   # mask everything
+    m = MaRe(ds).reduce_by_key(_key_first, value_by=_val_second, op="sum",
+                               num_keys=8)
+    out_keys, (out_sum,), out_cnt = m.collect()
+    assert out_keys.shape[0] == 0
+    assert m.last_diagnostics["stage0.key_overflow"] == 0
+
+
+@pytest.mark.parametrize("combiner", [True, False])
+def test_reduce_by_key_overflow_raises_at_action_not_trace(combiner):
+    keys = np.array([0, 1, 200, 300], np.int32)   # two keys out of range
+    vals = np.ones(4, np.float32)
+    m = _keyed((keys, vals), num_keys=4, combiner=combiner)
+    # building + describing the plan must not raise (laziness)
+    assert "reduce_by_key[sum, keys=4" in m.describe()
+    with pytest.raises(RuntimeError, match="key-table overflow"):
+        m.collect()
+
+
+def test_reduce_by_key_monoid_validation_and_image_spelling():
+    keys, vals = _kv_data()
+    with pytest.raises(ValueError, match="unknown reduce_by_key op"):
+        MaRe((keys, vals)).reduce_by_key(_key_first, op="mean", num_keys=8)
+    with pytest.raises(ValueError, match="not a known keyed-reduce monoid"):
+        MaRe((keys, vals)).reduce_by_key(_key_first, image="toolbox/topk",
+                                         num_keys=8)
+    m = MaRe((keys, vals), plan_cache=PlanCache()).reduce_by_key(
+        _key_first, value_by=_val_second, image="ubuntu", command="awk-sum",
+        num_keys=8)
+    assert m.plan.stages[-1].op == "sum"
+    out_keys, (out_sum,), _ = m.collect()
+    exp = _expected_groupby(keys, vals)
+    for k, s in zip(out_keys, out_sum):
+        assert abs(float(s) - exp[int(k)][0]) < 1e-4
+
+
+def test_keyed_bucket_capacity_matches_device_hash():
+    num_keys, n = 97, 4
+    caps = np.zeros(n, np.int64)
+    dest = np.asarray(
+        hash_keys(jnp.arange(num_keys, dtype=jnp.int32))) % n
+    np.add.at(caps, dest.astype(np.int64), 1)
+    assert keyed_bucket_capacity(num_keys, n) == int(caps.max())
+
+
 # -- plan structure & describe ------------------------------------------------
 
 def test_plan_builder_fuses_adjacent_maps():
@@ -210,6 +371,17 @@ def test_describe_shows_stage_dag():
     assert "map[toolbox/concat:latest]" in d
     assert "shuffle" in d
     assert "reduce[toolbox/sum:latest, depth=1]" in d
+
+
+def test_describe_shows_keyed_stage_and_counter_specs():
+    m = (MaRe((np.arange(8, dtype=np.int32),), plan_cache=PlanCache())
+         .repartition_by(_key_mod5)
+         .reduce_by_key(_key_first, op="sum", num_keys=5))
+    assert "reduce_by_key[sum, keys=5, combiner=on]" in m.describe()
+    assert m.plan.counter_specs() == (
+        (0, "shuffle_dropped"),
+        (1, "key_overflow"), (1, "shuffle_dropped"),
+        (1, "exchanged_records"))
 
 
 def test_dataset_property_materializes_pending_plan():
