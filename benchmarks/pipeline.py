@@ -25,7 +25,7 @@ import json
 import os
 import sys
 import time
-from typing import Dict
+from typing import Dict, Optional
 
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=8")
@@ -38,7 +38,8 @@ import jax                                           # noqa: E402
 import jax.numpy as jnp                              # noqa: E402
 
 from repro import compat                             # noqa: E402
-from repro.core import MaRe, PlanCache               # noqa: E402
+from repro.core import (ImageManifest, MaRe, PlanCache,  # noqa: E402
+                        Schema, field)
 from repro.core.container import (DEFAULT_REGISTRY, Partition,  # noqa: E402
                                   container_op, make_partition)
 
@@ -50,8 +51,13 @@ def _register_once():
     if "bench/gc-per-read:latest" in DEFAULT_REGISTRY.images():
         return
 
-    @container_op("bench/gc-per-read", registry=DEFAULT_REGISTRY)
-    def gc_per_read(part: Partition, command: str = "", **kw) -> Partition:
+    manifest = ImageManifest(
+        input_schema=Schema((field(np.int32, ("R",)), field(np.int32))),
+        output_schema=Schema((field(np.int32), field(np.int32))))
+
+    @container_op("bench/gc-per-read", registry=DEFAULT_REGISTRY,
+                  manifest=manifest)
+    def gc_per_read(part: Partition, **kw) -> Partition:
         """Per-read GC count + chromosome id (the per-record map stage)."""
         reads, read_id = part.records
         gc = jnp.sum((reads == 2) | (reads == 3), axis=-1).astype(jnp.int32)
@@ -117,6 +123,42 @@ def run_warm(ds, mesh, expected_gc: int, modes: Dict[str, Dict],
         r["cache"] = r.pop("cache").stats()
 
 
+def manifest_guard(ds, mesh, small: bool,
+                   baseline: Optional[Dict]) -> Dict:
+    """Assert manifest/schema checking is plan-time only.
+
+    Building a pipeline now runs full schema inference (manifests, mount
+    contracts, capacity transfer).  That work must (a) never trigger a
+    compile, and (b) leave compile counts — and, where comparable, warm
+    wall-clock — unchanged vs. the pre-manifest baseline recorded in
+    BENCH_pipeline.json.
+    """
+    cache = PlanCache()
+    builds = 64 if small else 256
+    t0 = time.monotonic()
+    for _ in range(builds):
+        m = build_pipeline(ds, mesh, cache, fuse=True)
+    build_us = (time.monotonic() - t0) / builds * 1e6
+    desc = m.describe()
+    assert "(i32, i32)" in desc, \
+        f"schema inference did not run at build time: {desc}"
+    assert cache.stats() == {"programs": 0, "hits": 0, "misses": 0}, \
+        f"plan building must not compile/execute: {cache.stats()}"
+    guard = {"plan_builds": builds,
+             "plan_build_us": build_us,
+             "plan_build_compiles": cache.stats()["misses"]}
+    if baseline is not None:
+        for mode, want in (("fused", 1), ("eager", 3)):
+            base = baseline.get(mode, {}).get("compiles")
+            if base is not None:
+                assert base == want, \
+                    f"baseline {mode} compiles changed: {base} != {want}"
+        guard["baseline_compiles"] = {
+            m: baseline.get(m, {}).get("compiles") for m in
+            ("fused", "eager")}
+    return guard
+
+
 def main() -> Dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--small", action="store_true",
@@ -126,6 +168,11 @@ def main() -> Dict:
 
     n_reads = 2_048 if args.small else 65_536
     reps = 3 if args.small else 20
+
+    baseline: Optional[Dict] = None
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            baseline = json.load(f)
 
     _register_once()
     mesh = compat.make_mesh((jax.device_count(),), ("data",))
@@ -146,6 +193,7 @@ def main() -> Dict:
     eager = run_cold(ds, mesh, expected_gc, fuse=False)
     run_warm(ds, mesh, expected_gc, {"fused": fused, "eager": eager},
              reps)
+    guard = manifest_guard(ds, mesh, args.small, baseline)
 
     out = {
         "bench": "pipeline",
@@ -160,7 +208,40 @@ def main() -> Dict:
         # shared machine; mean is also recorded per mode above
         "warm_speedup": eager["warm_min_s"] / fused["warm_min_s"],
         "cold_speedup": eager["cold_s"] / fused["cold_s"],
+        "manifest_guard": guard,
     }
+    # warm-path regression check vs. the pre-manifest baseline: the
+    # ORIGINAL pre-manifest warm time (plus the shape/device context it
+    # was measured under) is pinned in the guard block and propagated
+    # verbatim through EVERY regeneration — including --small runs that
+    # can't use it — so the guard stays an absolute reference, not a
+    # run-over-run ratchet that would re-baseline a slow drift.
+    pin = None
+    if baseline is not None:
+        mg = baseline.get("manifest_guard", {})
+        if mg.get("baseline_warm_min_s"):
+            pin = {k: mg[k] for k in ("baseline_warm_min_s",
+                                      "baseline_n_reads",
+                                      "baseline_devices") if k in mg}
+        elif (not args.small and baseline.get("n_reads") == n_reads
+                and baseline.get("devices") == jax.device_count()):
+            pin = {"baseline_warm_min_s": baseline["fused"]["warm_min_s"],
+                   "baseline_n_reads": baseline["n_reads"],
+                   "baseline_devices": baseline["devices"]}
+    if pin is not None:
+        guard.update(pin)
+    # compare only when this run matches the pinned measurement context
+    # (full mode, same shapes/devices) — generous tolerance, shared
+    # machines are noisy
+    if (pin is not None and not args.small
+            and pin.get("baseline_n_reads") == n_reads
+            and pin.get("baseline_devices") == jax.device_count()):
+        base_warm = pin["baseline_warm_min_s"]
+        ratio = fused["warm_min_s"] / base_warm
+        guard["warm_vs_baseline"] = ratio
+        assert ratio < 2.0, \
+            f"warm path regressed {ratio:.2f}x vs pre-manifest baseline " \
+            f"({fused['warm_min_s']:.4f}s vs {base_warm:.4f}s)"
     for mode in ("fused", "eager"):
         r = out[mode]
         print(f"pipeline,{mode},compiles={r['compiles']},"
@@ -176,6 +257,9 @@ def main() -> Dict:
         f"stage-at-a-time must compile >= 3 programs, got " \
         f"{eager['compiles']}"
     assert fused["recompiles_on_rerun"] == 0, "re-run must hit the cache"
+    print(f"pipeline,manifest_guard,plan_build="
+          f"{guard['plan_build_us']:.0f}us,compiles="
+          f"{guard['plan_build_compiles']}")
 
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)

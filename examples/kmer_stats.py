@@ -74,10 +74,19 @@ def main():
     fasta = os.path.join(tmp, "genome.fa")
     lines = write_genome(fasta)
 
-    stats = (
-        MaRe.from_source(fasta_source(fasta, split_bytes=1 << 13))
-        .map(image="kmer-stats", k=K)
-        .reduce_by_key(key_of, value_by=ones_of, op="sum", num_keys=4 ** K))
+    base = MaRe.from_source(fasta_source(fasta, split_bytes=1 << 13))
+    stats = (base
+             .map(image="kmer-stats", k=K)
+             .reduce_by_key(key_of, value_by=ones_of, op="sum",
+                            num_keys=4 ** K))
+    # describe() shows the inferred schema + capacity at every stage
+    # boundary: the kmer-stats manifest's capacity transfer sizes the
+    # window buffer (cap * (W - k + 1)) and declares key_space = 4**k,
+    # so num_keys above could equally be omitted and inferred:
+    inferred = (base
+                .map(image="kmer-stats", k=K)
+                .reduce_by_key(key_of, value_by=ones_of, op="sum"))
+    assert inferred.plan.stages[-1].num_keys == 4 ** K
     print(stats.describe())
 
     keys, (occurrences, ), record_counts = stats.collect()

@@ -17,7 +17,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import MaRe, TextFile, DEFAULT_CACHE
+from repro.core import MaRe, PlanTypeError, TextFile, DEFAULT_CACHE
 from repro.io import fasta_source
 
 
@@ -79,6 +79,17 @@ def main():
     assert int(total2[0]) == expected
     assert after["misses"] == before["misses"], "re-run must not recompile"
     print(f"re-run hit the compile cache: {after}")
+
+    # Typed image manifests: a mistyped pipeline fails while BUILDING the
+    # chain — grep-count emits (i32) count records, grep-chars requires
+    # byte records — instead of a shape error from inside the fused trace.
+    try:
+        (MaRe((np.arange(64, dtype=np.int32) % 4,))
+         .map(image="ubuntu", command="grep-count 2 3")
+         .map(image="ubuntu", command="grep-chars GC"))
+        raise AssertionError("mistyped chain must not build")
+    except PlanTypeError as e:
+        print(f"plan-time type check: {e}")
     print("OK")
 
 

@@ -8,11 +8,17 @@ from repro.core.container import (ContainerOp, Partition, Registry,
                                   DEFAULT_REGISTRY, container_op,
                                   make_partition, pull, register)
 from repro.core.dataset import ShardedDataset, collect, from_host
+from repro.core.manifests import (ArgSpec, CommandSpec, Contract,
+                                  ImageManifest, PRESERVE, PlanTypeError,
+                                  SAME)
 from repro.core.mare import MaRe
 from repro.core.mounts import (BinaryFiles, FileSetMount, Mount, RecordMount,
                                TextFile)
 from repro.core.plan import (KEYED_MONOIDS, KeyedReduceStage, MapStage, Plan,
-                             ReduceStage, ShuffleStage)
+                             ReduceStage, ShuffleStage, StageState,
+                             infer_states)
+from repro.core.schema import (Field, Schema, SchemaMismatch,
+                               bytes_record_schema, field, schema_of_records)
 from repro.core.planner import (DEFAULT_CACHE, PlanCache, compile_plan,
                                 execute, program_key)
 from repro.core.shuffle import (ShuffleResult, grouped_all_to_all, hash_keys,
@@ -32,7 +38,11 @@ __all__ = [
     "ShardedDataset", "collect", "from_host",
     "Mount", "RecordMount", "FileSetMount", "TextFile", "BinaryFiles",
     "Plan", "MapStage", "ShuffleStage", "ReduceStage", "KeyedReduceStage",
-    "KEYED_MONOIDS",
+    "KEYED_MONOIDS", "StageState", "infer_states",
+    "ImageManifest", "CommandSpec", "ArgSpec", "Contract", "PlanTypeError",
+    "PRESERVE", "SAME",
+    "Field", "Schema", "SchemaMismatch", "bytes_record_schema", "field",
+    "schema_of_records",
     "PlanCache", "DEFAULT_CACHE", "compile_plan", "execute", "program_key",
     "ShuffleResult", "grouped_all_to_all", "hash_keys", "shuffle_partition",
     "keyed_bucket_capacity",

@@ -21,6 +21,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.manifests import Contract, ImageManifest
 from repro.core.mounts import Mount
 
 
@@ -60,6 +61,13 @@ class ContainerOp:
     that reduce commands "always reduce the size of the partition").
     ``associative_commutative`` marks combiners that are safe for the
     K-level reduce tree (paper §1.2.2).
+
+    ``manifest`` is the image's declarative contract (schemas, capacity
+    transfer, monoid, command grammar); ``contract`` is that manifest
+    resolved against this op's command + params at pull time — the record
+    the planner type-checks at plan-build time.  Ops constructed directly
+    (no registry) carry neither: the planner treats their output schema
+    as unknown and falls back to execution-time checks only.
     """
 
     image: str
@@ -71,6 +79,8 @@ class ContainerOp:
     out_capacity: Optional[int] = None
     associative_commutative: bool = False
     params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    manifest: Optional[ImageManifest] = None
+    contract: Optional[Contract] = None
 
     @property
     def name(self) -> str:
@@ -131,23 +141,56 @@ pull = DEFAULT_REGISTRY.pull
 def container_op(image: str, *, tag: str = "latest",
                  out_capacity: Optional[int] = None,
                  associative_commutative: bool = False,
+                 manifest: Optional[ImageManifest] = None,
                  registry: Registry = DEFAULT_REGISTRY,
                  **default_params: Any):
     """Decorator: register ``fn(partition, **params) -> Partition``.
 
     The decorated function becomes an image factory: ``pull(image,
     **params)`` binds params and returns a :class:`ContainerOp`.
+
+    When a ``manifest`` is given, the pull-time ``command`` string is
+    parsed through its typed grammar (one central ``shlex``, typed args,
+    pull-time errors for unknown commands / bad arguments) instead of
+    reaching the implementation raw; a :class:`CommandSpec` may dispatch
+    to its own implementation fn.  Without a manifest the legacy behavior
+    holds: a non-empty command is passed to ``fn`` as the ``command``
+    keyword, to be interpreted by the image itself.
     """
 
     def deco(fn: Callable[..., Partition]) -> Callable[..., ContainerOp]:
         def factory(**params: Any) -> ContainerOp:
+            command = params.pop("command", "") or ""
             merged = dict(default_params)
-            merged.update(params)
+            impl = fn
+            assoc = associative_commutative
+            contract = None
+            if manifest is not None:
+                spec, parsed = manifest.parse_command(command, image=image)
+                merged.update(params)
+                merged.update(parsed)   # the command IS the interface:
+                #                         its argv wins over python kwargs
+                if spec is not None:
+                    if spec.fn is not None:
+                        impl = spec.fn
+                    if spec.associative_commutative is not None:
+                        assoc = spec.associative_commutative
+                elif command:
+                    # manifest without a grammar: the command string is
+                    # passed through for the image to interpret, exactly
+                    # as for manifest-less images
+                    merged["command"] = command
+                contract = manifest.resolve(spec, merged, image=image,
+                                            command=command)
+            else:
+                merged.update(params)
+                if command:
+                    merged["command"] = command
             return ContainerOp(
-                image=image, tag=tag, fn=fn,
+                image=image, tag=tag, fn=impl, command=command,
                 out_capacity=merged.pop("out_capacity", out_capacity),
-                associative_commutative=associative_commutative,
-                params=merged)
+                associative_commutative=assoc,
+                params=merged, manifest=manifest, contract=contract)
 
         registry.register(image, tag)(factory)
         factory.__name__ = fn.__name__

@@ -1,14 +1,18 @@
 """Standard container images (the "Docker Hub" of this repo).
 
-Each image is a registered ContainerOp factory whose ``command`` string is
-interpreted by the image itself — the ENTRYPOINT analogue.  The ``posix``
-image implements a micro-grammar covering the paper's Listing 1 commands
-(grep-count / awk-sum), plus generic combiners used by the evaluation
-pipelines (top-k filtering = sdsorter, concat = vcf-concat).
+Every image registers with an :class:`~repro.core.manifests.ImageManifest`:
+a declarative contract carrying record schemas, a capacity transfer
+function, reduce-monoid properties, and a typed command grammar.  The
+``posix`` image's grammar covers the paper's Listing 1 commands
+(``grep-count`` / ``awk-sum``) plus ``grep-chars`` for byte records; each
+command dispatches to its own implementation — the central grammar
+replaces the per-image ``shlex`` micro-parsers, so an unknown command or a
+mistyped argument fails at *pull* time with the image's grammar in the
+message, and the planner can type-check whole pipelines before tracing.
 """
 from __future__ import annotations
 
-import shlex
+import inspect
 from typing import Any, Callable, Optional
 
 import jax
@@ -16,58 +20,87 @@ import jax.numpy as jnp
 
 from repro.core.container import (ContainerOp, Partition, container_op,
                                   make_partition)
+from repro.core.manifests import (ArgSpec, CommandSpec, ImageManifest,
+                                  PRESERVE, SAME)
+from repro.core.schema import Schema, bytes_record_schema, field
 
 
 # ---------------------------------------------------------------------------
-# posix: grep-count / awk-sum over integer token records (Listing 1)
+# posix: grep-count / grep-chars / awk-sum (Listing 1 micro-tools)
 # ---------------------------------------------------------------------------
 
-def _posix_fn(part: Partition, command: str = "", **kw: Any) -> Partition:
-    argv = shlex.split(command)
-    if not argv:
-        raise ValueError("posix image requires a command")
-    prog = argv[0]
-    if prog == "grep-count":
-        # grep -o '<chars>' | wc -l : count records whose value is in a set.
-        # Records are int32 token codes; command: grep-count 2 3  (codes)
-        codes = jnp.asarray([int(a) for a in argv[1:]], jnp.int32)
-        (tokens,) = jax.tree.leaves(part.records)
-        valid = part.mask()
-        hit = jnp.isin(tokens, codes) & valid
-        total = jnp.sum(hit).astype(jnp.int32)
-        return make_partition((total[None],), jnp.int32(1))
-    if prog == "grep-chars":
-        # grep -o '[<chars>]' | wc -l over BYTE records: count occurrences
-        # of any of the given characters inside each record's valid length.
-        # Records: {"data": [cap, width] uint8, "len": [cap] int32}.
-        if len(argv) < 2:
-            raise ValueError("grep-chars needs a character-class argument")
-        codes = jnp.asarray([ord(c) for c in argv[1]], jnp.uint8)
-        data = part.records["data"]
-        lens = part.records["len"]
-        in_len = jnp.arange(data.shape[1])[None, :] < lens[:, None]
-        valid = part.mask()[:, None]
-        hit = jnp.isin(data, codes) & in_len & valid
-        total = jnp.sum(hit).astype(jnp.int32)
-        return make_partition((total[None],), jnp.int32(1))
-    if prog == "awk-sum":
-        # awk '{s+=$1} END {print s}' : sum records to a single record.
-        (vals,) = jax.tree.leaves(part.records)
-        valid = part.mask()
-        s = jnp.sum(jnp.where(valid, vals, 0), axis=0)
-        return make_partition((s[None],), jnp.int32(1))
-    raise ValueError(f"posix image: unknown command {prog!r}")
+#: Single-leaf tuple of scalar records (any dtype) — the token stream the
+#: Listing 1 integer pipeline flows through.
+_SCALAR_RECORDS = Schema((field(None),))
+#: One int32 count record — what the grep counters emit.
+_COUNT_RECORDS = Schema((field(jnp.int32),))
 
 
-@container_op("ubuntu", associative_commutative=True)
-def posix_ubuntu(part: Partition, command: str = "", **kw: Any) -> Partition:
-    """The paper's `ubuntu` image: POSIX text tools micro-grammar."""
-    return _posix_fn(part, command=command, **kw)
+def _grep_count(part: Partition, codes: Any = (), **kw: Any) -> Partition:
+    """``grep -o '<codes>' | wc -l``: count records whose value is in a
+    set of int token codes."""
+    code_arr = jnp.asarray(list(codes), jnp.int32)
+    (tokens,) = jax.tree.leaves(part.records)
+    valid = part.mask()
+    hit = jnp.isin(tokens, code_arr) & valid
+    total = jnp.sum(hit).astype(jnp.int32)
+    return make_partition((total[None],), jnp.int32(1))
 
 
-@container_op("posix", associative_commutative=True)
-def posix(part: Partition, command: str = "", **kw: Any) -> Partition:
-    return _posix_fn(part, command=command, **kw)
+def _grep_chars(part: Partition, chars: str = "", **kw: Any) -> Partition:
+    """``grep -o '[<chars>]' | wc -l`` over byte records: count occurrences
+    of any of the given characters inside each record's valid length."""
+    codes = jnp.asarray([ord(c) for c in chars], jnp.uint8)
+    data = part.records["data"]
+    lens = part.records["len"]
+    in_len = jnp.arange(data.shape[1])[None, :] < lens[:, None]
+    valid = part.mask()[:, None]
+    hit = jnp.isin(data, codes) & in_len & valid
+    total = jnp.sum(hit).astype(jnp.int32)
+    return make_partition((total[None],), jnp.int32(1))
+
+
+def _awk_sum(part: Partition, **kw: Any) -> Partition:
+    """``awk '{s+=$1} END {print s}'``: sum records to a single record."""
+    (vals,) = jax.tree.leaves(part.records)
+    valid = part.mask()
+    s = jnp.sum(jnp.where(valid, vals, 0), axis=0)
+    return make_partition((s[None],), jnp.int32(1))
+
+
+POSIX_MANIFEST = ImageManifest(
+    commands=(
+        CommandSpec(
+            "grep-count",
+            args=(ArgSpec("codes", type=int, required=False, variadic=True),),
+            fn=_grep_count,
+            input_schema=_SCALAR_RECORDS,
+            output_schema=_COUNT_RECORDS,
+            out_capacity=1),
+        CommandSpec(
+            "grep-chars",
+            args=(ArgSpec("chars", type=str),),
+            fn=_grep_chars,
+            input_schema=bytes_record_schema(),
+            output_schema=_COUNT_RECORDS,
+            out_capacity=1),
+        CommandSpec(
+            "awk-sum",
+            fn=_awk_sum,
+            output_schema=SAME,
+            out_capacity=1,
+            monoid="sum",
+            associative_commutative=True),
+    ))
+
+
+def _posix_entry(part: Partition, **kw: Any) -> Partition:
+    raise ValueError("posix image requires a command")  # pragma: no cover
+
+
+#: The paper's `ubuntu` image: POSIX text tools behind a typed grammar.
+posix_ubuntu = container_op("ubuntu", manifest=POSIX_MANIFEST)(_posix_entry)
+posix = container_op("posix", manifest=POSIX_MANIFEST)(_posix_entry)
 
 
 # ---------------------------------------------------------------------------
@@ -77,10 +110,21 @@ def posix(part: Partition, command: str = "", **kw: Any) -> Partition:
 
 _BASE_CODES = {65: 0, 67: 1, 71: 2, 84: 3}   # A C G T -> 2-bit codes
 
+KMER_MANIFEST = ImageManifest(
+    input_schema=bytes_record_schema(),
+    output_schema=Schema((field(jnp.int32), field(jnp.int32))),
+    # every record yields at most W - k + 1 windows
+    out_capacity=lambda cap, env: cap * (env["W"] - env["k"] + 1),
+    # packed 2-bit keys cover [0, 4**k) — downstream key tables can be
+    # sized (and bounds-checked) at plan time, FastKmer-style
+    key_space=lambda env: 4 ** env["k"],
+    commands=(CommandSpec(
+        "kmer-stats", args=(ArgSpec("k", type=int, required=False),)),),
+    default_command="kmer-stats")
 
-@container_op("kmer-stats")
-def kmer_stats(part: Partition, command: str = "", k: int = 8,
-               **kw: Any) -> Partition:
+
+@container_op("kmer-stats", manifest=KMER_MANIFEST, k=8)
+def kmer_stats(part: Partition, k: int = 8, **kw: Any) -> Partition:
     """Emit one ``(packed k-mer key, 1)`` record per k-mer occurrence.
 
     Input: byte records ``{"data": uint8 [cap, W], "len": int32 [cap]}``
@@ -88,14 +132,10 @@ def kmer_stats(part: Partition, command: str = "", k: int = 8,
     k-mers never span records).  Output records: ``(codes int32, ones
     int32)`` with the 2-bit packing ``A=0 C=1 G=2 T=3`` (case-insensitive);
     windows containing any other base (N, gaps) are skipped.  ``k`` comes
-    from the param or the command string (``kmer-stats 8``); ``k <= 15``
-    keeps codes within int32, and ``num_keys = 4**k`` downstream.
+    from the param or the command grammar (``kmer-stats 8``); ``k <= 15``
+    keeps codes within int32, and ``num_keys = 4**k`` downstream (declared
+    as the manifest's ``key_space``, so ``reduce_by_key`` can infer it).
     """
-    argv = shlex.split(command)
-    if len(argv) >= 2 and argv[0] == "kmer-stats":
-        k = int(argv[1])
-    elif len(argv) == 1 and argv[0].isdigit():
-        k = int(argv[0])
     if not 1 <= k <= 15:
         raise ValueError(f"kmer-stats needs 1 <= k <= 15, got {k}")
     data = part.records["data"]
@@ -130,24 +170,56 @@ def kmer_stats(part: Partition, command: str = "", k: int = 8,
 # Generic combinators (used by evaluation pipelines and tests)
 # ---------------------------------------------------------------------------
 
+def _accepts_command(fn: Callable[..., Any]) -> bool:
+    """Whether ``fn`` can receive the ``command`` keyword (named param or
+    **kwargs)."""
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):  # builtins / C callables
+        return False
+    for p in sig.parameters.values():
+        if p.kind is inspect.Parameter.VAR_KEYWORD:
+            return True
+        if p.name == "command" and p.kind in (
+                inspect.Parameter.POSITIONAL_OR_KEYWORD,
+                inspect.Parameter.KEYWORD_ONLY):
+            return True
+    return False
+
+
 def fn_image(name: str, fn: Callable[..., Partition], *,
              associative_commutative: bool = False,
+             manifest: Optional[ImageManifest] = None,
              registry=None, **defaults: Any) -> Callable[..., ContainerOp]:
     """Build + register an image from a python function at runtime
-    (the `docker build` analogue for ad-hoc tools)."""
+    (the `docker build` analogue for ad-hoc tools).
+
+    The wrapped fn receives the pull-time ``command`` string whenever its
+    signature can accept it (a ``command`` parameter or ``**kwargs``) —
+    runtime-built images interpret their command like registered ones do.
+    """
     from repro.core import container as c
     reg = registry or c.DEFAULT_REGISTRY
+    forward_command = _accepts_command(fn)
 
     @container_op(name, associative_commutative=associative_commutative,
-                  registry=reg, **defaults)
+                  manifest=manifest, registry=reg, **defaults)
     def _op(part: Partition, command: str = "", **kw: Any) -> Partition:
+        if forward_command:
+            return fn(part, command=command, **kw)
         return fn(part, **kw)
 
     return _op
 
 
-@container_op("toolbox/topk", associative_commutative=True)
-def topk_image(part: Partition, command: str = "", k: int = 30,
+TOPK_MANIFEST = ImageManifest(
+    output_schema=SAME,
+    out_capacity=lambda cap, env: min(int(env["k"]), cap))
+
+
+@container_op("toolbox/topk", associative_commutative=True,
+              manifest=TOPK_MANIFEST, k=30)
+def topk_image(part: Partition, k: int = 30,
                score_field: int = 0, **kw: Any) -> Partition:
     """sdsorter analogue: keep the k best-scoring records.
 
@@ -160,8 +232,11 @@ def topk_image(part: Partition, command: str = "", k: int = 30,
     if scores.ndim > 1:
         scores = scores.reshape(scores.shape[0], -1)[:, 0]
     valid = part.mask()
-    neg_inf = jnp.asarray(-jnp.inf, scores.dtype)
-    masked = jnp.where(valid, scores, neg_inf)
+    if jnp.issubdtype(scores.dtype, jnp.floating):
+        lowest = jnp.asarray(-jnp.inf, scores.dtype)
+    else:
+        lowest = jnp.asarray(jnp.iinfo(scores.dtype).min, scores.dtype)
+    masked = jnp.where(valid, scores, lowest)
     k_eff = min(k, part.capacity)
     _, idx = jax.lax.top_k(masked, k_eff)
     out = jax.tree.map(lambda l: jnp.take(l, idx, axis=0), part.records)
@@ -169,15 +244,24 @@ def topk_image(part: Partition, command: str = "", k: int = 30,
     return make_partition(out, cnt)
 
 
-@container_op("toolbox/concat", associative_commutative=True)
-def concat_image(part: Partition, command: str = "", **kw: Any) -> Partition:
+CONCAT_MANIFEST = ImageManifest(output_schema=SAME, out_capacity=PRESERVE)
+
+
+@container_op("toolbox/concat", associative_commutative=True,
+              manifest=CONCAT_MANIFEST)
+def concat_image(part: Partition, **kw: Any) -> Partition:
     """vcf-concat analogue: identity on records (concatenation is implicit
     in the tree gather); compacts valid records to the front."""
     return part
 
 
-@container_op("toolbox/sum", associative_commutative=True)
-def sum_image(part: Partition, command: str = "", **kw: Any) -> Partition:
+SUM_MANIFEST = ImageManifest(output_schema=SAME, out_capacity=1,
+                             monoid="sum")
+
+
+@container_op("toolbox/sum", associative_commutative=True,
+              manifest=SUM_MANIFEST)
+def sum_image(part: Partition, **kw: Any) -> Partition:
     """Elementwise sum of records into a single record."""
     valid = part.mask()
 

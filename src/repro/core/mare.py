@@ -41,25 +41,25 @@ from repro.core.container import (ContainerOp, Partition, Registry,
                                   DEFAULT_REGISTRY, make_partition)
 from repro.core.dataset import ShardedDataset
 from repro.core.mounts import Mount
-from repro.core.plan import KEYED_MONOIDS, Plan
-
-#: Container images that double as keyed-reduce merge monoids (the paper's
-#: framing: the combiner is a container command; here the command resolves
-#: to a segment-reduce monoid instead of a per-partition ContainerOp).
-_MONOID_IMAGES = {"toolbox/sum": "sum"}
-_MONOID_COMMANDS = {"awk-sum": "sum"}
+from repro.core.plan import (KEYED_MONOIDS, Plan, StageState, infer_stage,
+                             infer_states)
+from repro.core.schema import schema_of_records
 
 
-def _resolve_monoid(image: str, command: str) -> str:
-    if image in _MONOID_IMAGES:
-        return _MONOID_IMAGES[image]
-    if image in ("posix", "ubuntu") and command in _MONOID_COMMANDS:
-        return _MONOID_COMMANDS[command]
-    raise ValueError(
-        f"image {image!r} (command {command!r}) is not a known keyed-reduce "
-        f"monoid; use op= directly ({KEYED_MONOIDS}) or one of "
-        f"{sorted(_MONOID_IMAGES)} / posix|ubuntu with "
-        f"{sorted(_MONOID_COMMANDS)}")
+def _resolve_monoid(image: str, command: str, registry: Registry) -> str:
+    """Keyed-reduce combiner via the paper's container spelling: the image
+    is pulled and its *manifest* must declare a monoid (``toolbox/sum``
+    and the posix ``awk-sum`` command declare ``monoid="sum"``)."""
+    op = registry.pull(image, command=command)
+    monoid = op.contract.monoid if op.contract is not None else None
+    if monoid is None:
+        raise ValueError(
+            f"image {image!r} (command {command!r}) is not a known "
+            f"keyed-reduce monoid: its manifest declares no `monoid`; "
+            f"use op= directly ({KEYED_MONOIDS}) or an image whose "
+            f"manifest declares one (e.g. 'toolbox/sum', or 'ubuntu' "
+            f"with command 'awk-sum')")
+    return monoid
 
 
 def _resolve_op(image: Optional[str], op: Optional[ContainerOp],
@@ -103,6 +103,9 @@ class MaRe:
         #: (keyed "stage<i>.<kind>", e.g. exchanged-record volume of a
         #: reduce_by_key — see planner.execute diagnostics).
         self.last_diagnostics: dict = {}
+        #: Inferred StageState per stage boundary (build-time type check);
+        #: computed in _chain, reset when the plan materializes.
+        self._states: Optional[list] = None
 
     @classmethod
     def from_source(cls, source: Any, mesh: Optional[Mesh] = None,
@@ -120,9 +123,31 @@ class MaRe:
                     width=width, workers=workers)
         return cls(ds, registry=registry)
 
+    def _initial_state(self) -> StageState:
+        ds = self._dataset
+        return StageState(schema=schema_of_records(ds.records),
+                          capacity=ds.capacity, num_shards=ds.num_shards)
+
+    def _stage_states(self) -> list:
+        """Inferred [initial, after-stage-0, ...] states for the pending
+        plan — the build-time type check (raises PlanTypeError)."""
+        if self._states is None:
+            self._states = infer_states(self.plan, self._initial_state())
+        return self._states
+
     def _chain(self, plan: Plan) -> "MaRe":
-        return MaRe(self._dataset, registry=self.registry, _plan=plan,
-                    plan_cache=self.plan_cache, fuse=self.fuse)
+        m = MaRe(self._dataset, registry=self.registry, _plan=plan,
+                 plan_cache=self.plan_cache, fuse=self.fuse)
+        # type-check at BUILD time, incrementally: every primitive either
+        # appends one stage or extends the trailing MapStage, so the
+        # parent's inferred states are a valid prefix up to the new plan's
+        # last stage — only that stage is (re-)inferred here, keeping
+        # chain construction O(1) per call instead of O(stages).
+        prefix = self._stage_states()[:len(plan.stages)]
+        last = len(plan.stages) - 1
+        m._states = prefix + [infer_stage(plan.stages[last], prefix[-1],
+                                          last)]
+        return m
 
     def _materialize(self) -> ShardedDataset:
         """Run all pending stages as one fused program (memoized compile);
@@ -133,6 +158,7 @@ class MaRe:
                 self._dataset, self.plan, cache=self.plan_cache,
                 fuse=self.fuse, diagnostics=diag)
             self.plan = Plan()
+            self._states = None
             self.last_diagnostics = diag
         return self._dataset
 
@@ -203,7 +229,7 @@ class MaRe:
             key_by, capacity=capacity, num_partitions=num_partitions))
 
     def reduce_by_key(self, key_by: Callable[[Any], jax.Array], *,
-                      num_keys: int,
+                      num_keys: Optional[int] = None,
                       op: str = "sum",
                       value_by: Optional[Callable[[Any], Any]] = None,
                       image: Optional[str] = None,
@@ -216,12 +242,17 @@ class MaRe:
         ``key_by(records) -> int array [capacity]`` computes a key per
         record; keys must lie in ``[0, num_keys)`` (the bounded key table —
         out-of-range keys raise ``RuntimeError`` at action time through
-        the same one-sync error channel as shuffle overflow).  ``value_by``
+        the same one-sync error channel as shuffle overflow).  When the
+        upstream image's manifest declares a ``key_space`` (e.g.
+        ``kmer-stats``: ``4**k``), ``num_keys`` may be omitted and is
+        inferred at plan time — and an explicit ``num_keys`` smaller than
+        the declared key space fails at *build* time.  ``value_by``
         selects the value pytree to fold (default: the whole record
         pytree); ``op`` is the merge monoid (``sum`` / ``max`` / ``min``,
         associative+commutative by construction), or pass a container
         spelling (``image="toolbox/sum"``, or ``image="ubuntu",
-        command="awk-sum"``) as in the paper's combiner listings.
+        command="awk-sum"``) — the pulled image's *manifest* must declare
+        the monoid, as in the paper's combiner listings.
 
         Execution fuses into the single program like every other stage:
         with ``combiner=True`` (default) each shard pre-aggregates per key
@@ -234,13 +265,19 @@ class MaRe:
         when available (``use_kernel`` / ``REPRO_SEGMENT_KERNEL``
         override the backend default).
         """
-        if num_keys is None or num_keys < 1:
-            raise ValueError(f"num_keys must be >= 1, got {num_keys}")
         if image is not None:
-            op = _resolve_monoid(image, command)
+            op = _resolve_monoid(image, command, self.registry)
         if op not in KEYED_MONOIDS:
             raise ValueError(f"unknown reduce_by_key op {op!r}; expected "
                              f"one of {KEYED_MONOIDS}")
+        if num_keys is None:
+            num_keys = self._stage_states()[-1].key_space
+            if num_keys is None:
+                raise ValueError(
+                    "num_keys not given and no upstream image manifest "
+                    "declares a key_space to infer it from")
+        if num_keys < 1:
+            raise ValueError(f"num_keys must be >= 1, got {num_keys}")
         return self._chain(self.plan.then_keyed_reduce(
             key_by, op=op, num_keys=num_keys, value_by=value_by,
             combiner=combiner, capacity=capacity, use_kernel=use_kernel))
@@ -277,7 +314,18 @@ class MaRe:
         return self._dataset.num_shards
 
     def describe(self) -> str:
-        """Human-readable view of the pending stage DAG (no execution)."""
+        """Human-readable view of the pending stage DAG (no execution),
+        annotated with the inferred record schema at every stage boundary
+        (``{schema}#capacity``; ``?`` where an op without a manifest makes
+        it unknown)."""
+        states = self._stage_states()
+        if self.plan.empty:
+            chain = "<identity>"
+        else:
+            chain = " -> ".join(
+                f"{st.describe()} : {state.describe()}"
+                for st, state in zip(self.plan.stages, states[1:]))
         return (f"MaRe(shards={self._dataset.num_shards}, "
                 f"cap={self._dataset.capacity}, "
-                f"plan=[{self.plan.describe()}])")
+                f"schema={states[0].describe()}, "
+                f"plan=[{chain}])")

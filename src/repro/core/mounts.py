@@ -22,6 +22,9 @@ import dataclasses
 from typing import Any, Mapping, Optional, Tuple
 
 import jax
+import numpy as np
+
+from repro.core.schema import Schema
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +39,11 @@ class Mount:
 
     def validate(self, records: Any) -> None:  # pragma: no cover - abstract
         raise NotImplementedError
+
+    def validate_schema(self, schema: Schema) -> None:
+        """Plan-time twin of :meth:`validate`: check the mount contract
+        against an *inferred* record schema instead of live arrays."""
+        raise NotImplementedError  # pragma: no cover - abstract
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +80,27 @@ class RecordMount(Mount):
                         f"mount {self.path}: record shape {l.shape[1:]} != "
                         f"contract {self.record_shape}")
 
+    def validate_schema(self, schema: Schema) -> None:
+        fields = jax.tree.leaves(schema.fields)
+        if not fields:
+            raise ValueError(f"mount {self.path}: empty record schema")
+        if self.dtype is not None:
+            want = np.dtype(self.dtype).name
+            for f in fields:
+                if f.dtype is not None and f.dtype != want:
+                    raise ValueError(
+                        f"mount {self.path}: dtype {f.dtype} != contract "
+                        f"{want} (schema {schema.describe()})")
+        if self.record_shape is not None:
+            want_shape = tuple(self.record_shape)
+            for f in fields:
+                concrete = tuple(d for d in f.shape if isinstance(d, int))
+                if len(concrete) == len(f.shape) and f.shape != want_shape:
+                    raise ValueError(
+                        f"mount {self.path}: record shape {f.shape} != "
+                        f"contract {want_shape} (schema "
+                        f"{schema.describe()})")
+
 
 @dataclasses.dataclass(frozen=True)
 class FileSetMount(Mount):
@@ -92,6 +121,18 @@ class FileSetMount(Mount):
             missing = set(self.keys) - set(records)
             if missing:
                 raise ValueError(f"mount {self.path}: missing files {missing}")
+
+    def validate_schema(self, schema: Schema) -> None:
+        if not isinstance(schema.fields, Mapping):
+            raise ValueError(
+                f"mount {self.path}: FileSetMount requires a dict of arrays, "
+                f"got record schema {schema.describe()}")
+        if self.keys is not None:
+            missing = set(self.keys) - set(schema.fields)
+            if missing:
+                raise ValueError(
+                    f"mount {self.path}: missing files {sorted(missing)} "
+                    f"(schema {schema.describe()})")
 
 
 # Paper-fidelity aliases -----------------------------------------------------

@@ -15,12 +15,14 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Any, Callable, Hashable, Optional, Tuple, Union
+from typing import Any, Callable, Hashable, List, Optional, Tuple, Union
 
 import jax
 import numpy as np
 
 from repro.core.container import ContainerOp, Partition, make_partition
+from repro.core.manifests import PlanTypeError
+from repro.core.schema import Field, Schema, SchemaMismatch
 
 
 class _IdKey:
@@ -250,12 +252,230 @@ class Plan:
 
 
 def _apply_chain(ops: Tuple[ContainerOp, ...], records: Any,
-                 count: jax.Array) -> Partition:
+                 count: jax.Array, stage_idx: Optional[int] = None
+                 ) -> Partition:
+    where = f"stage {stage_idx}" if stage_idx is not None else "stage"
     part = make_partition(records, count)
     for op in ops:
         if op.input_mount is not None:
-            op.input_mount.validate(part.records)
+            try:
+                op.input_mount.validate(part.records)
+            except ValueError as e:
+                raise ValueError(
+                    f"{where} (map[{op.name}]): input mount validation "
+                    f"failed: {e}") from e
         part = op(part)
         if op.output_mount is not None:
-            op.output_mount.validate(part.records)
+            try:
+                op.output_mount.validate(part.records)
+            except ValueError as e:
+                raise ValueError(
+                    f"{where} (map[{op.name}]): output mount validation "
+                    f"failed: {e}") from e
     return part
+
+
+# ---------------------------------------------------------------------------
+# Plan-time schema & capacity inference (manifests consumed here)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StageState:
+    """Inferred dataset state at one stage boundary.
+
+    ``schema``/``capacity`` are ``None`` when an op without a manifest (or
+    without a declared output schema) makes them unknown — downstream
+    checks are then skipped and errors surface at trace/action time as
+    before.  ``key_space`` is the declared key range of the current
+    records' key leaf (set by key-emitting images like ``kmer-stats``),
+    used to size and bounds-check keyed-reduce tables; ``producer`` labels
+    the stage that produced the current schema, for error messages.
+    """
+
+    schema: Optional[Schema]
+    capacity: Optional[int]
+    num_shards: int = 1
+    key_space: Optional[int] = None
+    producer: str = "input dataset"
+
+    def describe(self) -> str:
+        s = self.schema.describe() if self.schema is not None else "?"
+        c = self.capacity if self.capacity is not None else "?"
+        return f"{s}#{c}"
+
+
+def _infer_op(state: StageState, op: ContainerOp, stage_idx: int,
+              reduce_shards: Optional[int] = None) -> StageState:
+    """Push ``state`` through one ContainerOp's declared contract.
+
+    ``reduce_shards`` is set when the op runs as a reduce combiner: a
+    capacity-PRESERVE combiner is concat-like and its single surviving
+    partition must hold every shard's records (tree_reduce's rule).
+    """
+    op_label = op.contract.label if op.contract is not None else op.name
+    label = f"stage {stage_idx} ({op_label})"
+    if op.input_mount is not None and state.schema is not None:
+        try:
+            op.input_mount.validate_schema(state.schema)
+        except ValueError as e:
+            raise PlanTypeError(f"{label}: input mount: {e}") from e
+    contract = op.contract
+    env: dict = dict(contract.params) if contract is not None else {}
+    if (contract is not None and contract.input_schema is not None
+            and state.schema is not None):
+        try:
+            env = contract.check_input(state.schema)
+        except SchemaMismatch as e:
+            raise PlanTypeError(
+                f"{label}: input schema mismatch: {contract.label} "
+                f"expects {contract.input_schema.describe()} but receives "
+                f"{state.schema.describe()} from {state.producer}: {e}"
+            ) from e
+    if contract is not None:
+        out_schema = contract.infer_output_schema(state.schema, env)
+        try:
+            out_cap = contract.infer_out_capacity(state.capacity, env)
+        except ValueError as e:
+            raise PlanTypeError(f"{label}: {e}") from e
+        if reduce_shards is not None and out_cap is not None \
+                and state.capacity is not None and out_cap >= state.capacity:
+            # concat-like combiner: the surviving partition holds all shards
+            out_cap = reduce_shards * state.capacity
+        key_space = contract.infer_key_space(env)
+    else:
+        out_schema = None
+        out_cap = op.out_capacity
+        key_space = None
+    if op.output_mount is not None and out_schema is not None:
+        try:
+            op.output_mount.validate_schema(out_schema)
+        except ValueError as e:
+            raise PlanTypeError(f"{label}: output mount: {e}") from e
+    return StageState(schema=out_schema, capacity=out_cap,
+                      num_shards=state.num_shards, key_space=key_space,
+                      producer=label)
+
+
+def _check_key_by(stage, state: StageState, stage_idx: int,
+                  what: str) -> None:
+    """Abstractly evaluate a keyBy against the inferred schema: it must
+    map the record pytree to an int array of one key per record."""
+    if state.schema is None or state.capacity is None \
+            or not state.schema.concrete:
+        return
+    structs = state.schema.structs(state.capacity)
+    try:
+        spec = jax.eval_shape(stage.key_by, structs)
+    except Exception as e:
+        raise PlanTypeError(
+            f"stage {stage_idx} ({what}): key_by failed against inferred "
+            f"schema {state.schema.describe()} (from {state.producer}): "
+            f"{e}") from e
+    leaves = jax.tree.leaves(spec)
+    ok = (len(leaves) == 1
+          and np.issubdtype(np.dtype(leaves[0].dtype), np.integer)
+          and tuple(leaves[0].shape) == (state.capacity,))
+    if not ok:
+        got = [(str(l.dtype), tuple(l.shape)) for l in leaves]
+        raise PlanTypeError(
+            f"stage {stage_idx} ({what}): key_by must return one int "
+            f"array of shape [{state.capacity}] over schema "
+            f"{state.schema.describe()}, got {got}")
+
+
+def _key_by_is_passthrough(key_by, state: StageState) -> bool:
+    """Whether ``key_by`` provably returns the KEY leaf unchanged.
+
+    The declared ``key_space`` describes the record's key leaf — by
+    convention the *first* leaf of a key-emitting image's output records
+    (``kmer-stats``: ``(codes, ones)``).  An arbitrary ``key_by`` may
+    remap keys into a smaller range, or key on a different column
+    entirely, so the plan-time bounds check below is only sound when the
+    key leaf reaches the table untransformed — detected conservatively
+    from the jaxpr (no equations, output is the first input leaf).
+    Anything else defers to the action-time overflow counter.
+    """
+    if state.schema is None or state.capacity is None \
+            or not state.schema.concrete:
+        return False
+    try:
+        closed = jax.make_jaxpr(key_by)(
+            state.schema.structs(state.capacity))
+    except Exception:
+        return False
+    jaxpr = closed.jaxpr
+    return (not jaxpr.eqns and len(jaxpr.outvars) == 1
+            and len(jaxpr.invars) > 0
+            and jaxpr.outvars[0] is jaxpr.invars[0])
+
+
+def _infer_keyed(state: StageState, stage: "KeyedReduceStage",
+                 stage_idx: int) -> StageState:
+    label = f"stage {stage_idx} ({stage.describe()})"
+    if (state.key_space is not None and stage.num_keys < state.key_space
+            and _key_by_is_passthrough(stage.key_by, state)):
+        raise PlanTypeError(
+            f"{label}: key table num_keys={stage.num_keys} is smaller "
+            f"than the key space {state.key_space} declared by "
+            f"{state.producer} — keys would overflow at action time; "
+            f"raise num_keys (or omit it to infer {state.key_space})")
+    _check_key_by(stage, state, stage_idx, stage.describe())
+    out_schema = None
+    if state.schema is not None and state.capacity is not None \
+            and state.schema.concrete:
+        structs = state.schema.structs(state.capacity)
+        values = structs if stage.value_by is None else None
+        if stage.value_by is not None:
+            try:
+                values = jax.eval_shape(stage.value_by, structs)
+            except Exception as e:
+                raise PlanTypeError(
+                    f"{label}: value_by failed against inferred schema "
+                    f"{state.schema.describe()}: {e}") from e
+        value_fields = jax.tree.map(
+            lambda l: Field(np.dtype(l.dtype).name,
+                            tuple(int(d) for d in l.shape[1:])), values)
+        out_schema = Schema((Field("int32"), value_fields, Field("int32")))
+    return StageState(schema=out_schema, capacity=stage.num_keys,
+                      num_shards=state.num_shards,
+                      key_space=stage.num_keys, producer=label)
+
+
+def infer_stage(stage: Stage, state: StageState, i: int) -> StageState:
+    """Push an inferred state through one stage (see :func:`infer_states`)."""
+    if isinstance(stage, MapStage):
+        for op in stage.ops:
+            state = _infer_op(state, op, i)
+        return state
+    if isinstance(stage, ShuffleStage):
+        _check_key_by(stage, state, i, "repartition_by")
+        # every source shard may contribute up to `capacity` records
+        # (shuffle_partition: output capacity = axis_size * capacity)
+        send_cap = stage.capacity or state.capacity
+        out_cap = (state.num_shards * send_cap
+                   if send_cap is not None else None)
+        return dataclasses.replace(state, capacity=out_cap)
+    if isinstance(stage, KeyedReduceStage):
+        return _infer_keyed(state, stage, i)
+    if isinstance(stage, ReduceStage):
+        return _infer_op(state, stage.op, i, reduce_shards=state.num_shards)
+    raise TypeError(  # pragma: no cover - defensive
+        f"unknown stage type {type(stage).__name__}")
+
+
+def infer_states(plan: Plan, initial: StageState) -> List[StageState]:
+    """Type-check a plan against manifests; states after each stage.
+
+    Runs at plan-*build* time (every ``MaRe.map/...`` call): declared
+    image contracts, mount contracts, capacity transfers and keyBy
+    signatures are checked stage by stage, raising :class:`PlanTypeError`
+    with the stage index and both schemas — instead of a cryptic shape
+    error from inside the fused ``shard_map`` trace.  Returns
+    ``[initial, after_stage_0, ...]``.
+    """
+    states = [initial]
+    state = initial
+    for i, stage in enumerate(plan.stages):
+        state = infer_stage(stage, state, i)
+        states.append(state)
+    return states

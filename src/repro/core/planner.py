@@ -165,12 +165,28 @@ def _apply_keyed(stage: KeyedReduceStage, part: Partition, axis: str,
                  res.dropped.astype(jnp.int32), exchanged]
 
 
-def _apply_stage(stage, part: Partition, axis: str, axis_size: int
+def _validate_mount(mount, records, stage_idx: int, op_name: str,
+                    which: str) -> None:
+    """Execution-time mount validation with stage/image context (fires
+    when plan-time inference couldn't check — unknown upstream schema)."""
+    if mount is None:
+        return
+    try:
+        mount.validate(records)
+    except ValueError as e:
+        raise ValueError(
+            f"stage {stage_idx} (reduce[{op_name}]): {which} mount "
+            f"validation failed: {e}") from e
+
+
+def _apply_stage(stage, part: Partition, axis: str, axis_size: int,
+                 stage_idx: int = 0
                  ) -> Tuple[Partition, List[jax.Array]]:
     """Shard-interior application of one stage; returns ``(part,
     counters)`` with counters matching ``stage_counter_kinds(stage)``."""
     if isinstance(stage, MapStage):
-        return _apply_chain(stage.ops, part.records, part.count), []
+        return _apply_chain(stage.ops, part.records, part.count,
+                            stage_idx), []
     if isinstance(stage, ShuffleStage):
         keys = stage.key_by(part.records)
         if (stage.num_partitions is not None
@@ -183,9 +199,13 @@ def _apply_stage(stage, part: Partition, axis: str, axis_size: int
     if isinstance(stage, KeyedReduceStage):
         return _apply_keyed(stage, part, axis, axis_size)
     if isinstance(stage, ReduceStage):
+        _validate_mount(stage.op.input_mount, part.records, stage_idx,
+                        stage.op.name, "input")
         part = tree_reduce_partition(
             part, stage.op, axis_name=axis, axis_size=axis_size,
             depth=stage.depth)
+        _validate_mount(stage.op.output_mount, part.records, stage_idx,
+                        stage.op.name, "output")
         return part, []
     raise TypeError(f"unknown stage type {type(stage).__name__}")
 
@@ -202,8 +222,8 @@ def lower(plan: Plan, axis: str, axis_size: int):
     def interior(records, counts):
         part = make_partition(records, counts[0])
         counters: List[jax.Array] = []
-        for stage in plan.stages:
-            part, cs = _apply_stage(stage, part, axis, axis_size)
+        for i, stage in enumerate(plan.stages):
+            part, cs = _apply_stage(stage, part, axis, axis_size, i)
             counters.extend(cs)
         outs = (part.records, part.count[None])
         if counters:

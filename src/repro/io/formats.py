@@ -20,6 +20,7 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from repro.core.schema import Schema, bytes_record_schema
 from repro.io.backends import StorageBackend
 from repro.io.splits import InputSplit
 
@@ -30,6 +31,15 @@ class RecordFormat:
     """Line-framed record reader; subclasses refine record extraction."""
 
     name = "base"
+
+    @property
+    def schema(self) -> Schema:
+        """The record schema :func:`pack_records` output satisfies — the
+        same ``{"data": u8[W], "len": i32}`` contract byte-oriented image
+        manifests declare as their input, so an ingested dataset
+        type-checks against e.g. ``grep-chars``/``kmer-stats`` at plan
+        time (``W`` binds to the packed width)."""
+        return bytes_record_schema()
 
     def records_from_lines(self, lines: List[bytes]) -> List[bytes]:
         """Map complete, newline-stripped lines to records."""

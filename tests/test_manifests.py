@@ -1,0 +1,362 @@
+"""Typed image manifests: schema unification, command grammar, plan-time
+type checking / capacity inference, monoid resolution, mount wiring."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ArgSpec, CommandSpec, ImageManifest, MaRe, PlanCache,
+                        PlanTypeError, RecordMount, Registry, SAME, Schema,
+                        SchemaMismatch, TextFile, bytes_record_schema, field,
+                        pull, schema_of_records)
+from repro.core.container import ContainerOp, container_op, make_partition
+from repro.core.images import fn_image
+from repro.core.schema import substitute, unify
+from repro.io.formats import FORMATS, pack_records
+
+
+# -- schema primitives --------------------------------------------------------
+
+def test_schema_of_records_and_describe():
+    recs = {"data": np.zeros((4, 70), np.uint8),
+            "len": np.zeros((4,), np.int32)}
+    s = schema_of_records(recs)
+    assert s.concrete
+    assert s.describe() == "{data: u8[70], len: i32}"
+    assert schema_of_records((np.zeros((3,), np.int32),)).describe() \
+        == "(i32)"
+
+
+def test_unify_binds_symbolic_dims():
+    declared = bytes_record_schema()            # {"data": u8[W], "len": i32}
+    actual = schema_of_records({"data": np.zeros((4, 70), np.uint8),
+                                "len": np.zeros((4,), np.int32)})
+    env = unify(declared, actual)
+    assert env["W"] == 70
+    assert substitute(declared, env).describe() == "{data: u8[70], len: i32}"
+
+
+def test_unify_mismatches_raise_with_leaf_path():
+    declared = bytes_record_schema()
+    wrong_dtype = schema_of_records({"data": np.zeros((4, 70), np.int32),
+                                     "len": np.zeros((4,), np.int32)})
+    with pytest.raises(SchemaMismatch, match="dtype"):
+        unify(declared, wrong_dtype)
+    wrong_structure = schema_of_records((np.zeros((4,), np.int32),))
+    with pytest.raises(SchemaMismatch, match="structure"):
+        unify(declared, wrong_structure)
+
+
+def test_format_schema_matches_packed_records():
+    packed = pack_records([b"ACGT", b"GG"], capacity=4)
+    for fmt in FORMATS.values():
+        env = unify(fmt.schema, schema_of_records(packed))
+        assert env["W"] == 4
+
+
+# -- command grammar (pull-time) ----------------------------------------------
+
+def test_grammar_unknown_command_and_missing_arg():
+    with pytest.raises(ValueError, match="unknown command 'grep-lines'"):
+        pull("ubuntu", command="grep-lines GC")
+    with pytest.raises(ValueError, match="missing required argument"):
+        pull("ubuntu", command="grep-chars")
+    with pytest.raises(ValueError, match="requires a command; grammar"):
+        pull("ubuntu")
+
+
+def test_grammar_typed_args_and_dispatch():
+    op = pull("ubuntu", command="grep-count 2 3")
+    assert op.params["codes"] == (2, 3)          # typed, not shlex strings
+    with pytest.raises(ValueError, match="bad argument for 'codes'"):
+        pull("ubuntu", command="grep-count two")
+    with pytest.raises(ValueError, match="unexpected arguments"):
+        pull("ubuntu", command="awk-sum extra")
+    # command dispatch: awk-sum resolves its own implementation + monoid
+    awk = pull("ubuntu", command="awk-sum")
+    assert awk.associative_commutative
+    assert awk.contract.monoid == "sum"
+    assert pull("kmer-stats", command="kmer-stats 4").params["k"] == 4
+
+
+def test_command_argv_overrides_python_kwargs():
+    op = pull("kmer-stats", command="kmer-stats 5", k=9)
+    assert op.params["k"] == 5                   # the command IS the interface
+
+
+# -- plan-time type checking (acceptance criteria) ----------------------------
+
+def test_mistyped_pipeline_fails_at_build_not_trace():
+    """grep-count emits (i32); grep-chars requires byte records — the chain
+    must fail while BUILDING, before anything compiles."""
+    cache = PlanCache()
+    m = MaRe((np.arange(16, dtype=np.int32),), plan_cache=cache).map(
+        image="ubuntu", command="grep-count 2 3")
+    with pytest.raises(PlanTypeError) as exc:
+        m.map(image="ubuntu", command="grep-chars GC")
+    msg = str(exc.value)
+    assert "stage 0" in msg                      # names the stage
+    assert "{data: u8[W], len: i32}" in msg      # both schemas in message
+    assert "(i32)" in msg
+    assert "grep-chars" in msg and "grep-count" in msg
+    assert cache.stats()["misses"] == 0          # nothing was compiled
+
+
+def test_reduce_by_key_num_keys_below_declared_key_space():
+    packed = pack_records([b"ACGTACGT", b"GGGGCCCC"], capacity=4)
+    m = MaRe(packed, plan_cache=PlanCache()).map(image="kmer-stats", k=3)
+    with pytest.raises(PlanTypeError, match="num_keys=10 is smaller"):
+        m.reduce_by_key(lambda r: r[0], value_by=lambda r: (r[1],),
+                        op="sum", num_keys=10)   # key space is 4**3 = 64
+
+
+def test_reduce_by_key_num_keys_inferred_from_manifest():
+    packed = pack_records([b"ACGTACGT", b"GGGGCCCC"], capacity=4)
+    m = (MaRe(packed, plan_cache=PlanCache())
+         .map(image="kmer-stats", k=3)
+         .reduce_by_key(lambda r: r[0], value_by=lambda r: (r[1],),
+                        op="sum"))              # num_keys omitted
+    assert m.plan.stages[-1].num_keys == 4 ** 3
+    keys, (occ,), cnt = m.collect()
+    assert int(occ.sum()) == 2 * (8 - 3 + 1)     # all windows valid ACGT
+
+
+def test_key_space_bound_skipped_when_key_by_remaps():
+    """The declared key_space describes the record's key leaf; a key_by
+    that remaps keys into a smaller range must not be rejected."""
+    packed = pack_records([b"ACGTACGT", b"GGGGCCCC"], capacity=4)
+    m = (MaRe(packed, plan_cache=PlanCache())
+         .map(image="kmer-stats", k=3)
+         .reduce_by_key(lambda r: r[0] % 16, value_by=lambda r: (r[1],),
+                        op="sum", num_keys=16))    # < 4**3, but remapped
+    keys, (occ,), _ = m.collect()
+    assert int(occ.sum()) == 2 * (8 - 3 + 1)
+    assert all(0 <= int(k) < 16 for k in keys)
+
+
+def test_key_space_bound_skipped_when_keyed_on_other_leaf():
+    """key_space describes the FIRST record leaf; keying on a different
+    column must not trip the bound check."""
+    packed = pack_records([b"ACGTACGT"], capacity=2)
+    m = (MaRe(packed, plan_cache=PlanCache())
+         .map(image="kmer-stats", k=2)
+         .reduce_by_key(lambda r: r[1], value_by=lambda r: (r[1],),
+                        op="sum", num_keys=2))    # keys on the ones column
+    keys, (s,), _ = m.collect()
+    assert set(int(k) for k in keys) <= {0, 1}
+
+
+def test_single_leaf_schema_accepts_bare_array_records():
+    """grep-count reads 'the one record array' via tree.leaves, and its
+    contract must accept any single-leaf pytree — including a bare
+    ndarray, which worked pre-manifest."""
+    dna = np.array([2, 3, 0, 1, 2], np.int32)
+    m = (MaRe(dna, plan_cache=PlanCache())     # bare array, no tuple wrap
+         .map(image="ubuntu", command="grep-count 2 3"))
+    assert int(np.asarray(m.collect()).sum()) == 3
+
+
+def test_fn_image_with_grammarless_manifest_forwards_command():
+    seen = {}
+
+    def tool(part, command="", **kw):
+        seen["command"] = command
+        return part
+
+    reg = Registry()
+    fn_image("anon/manifested-cmd", tool, registry=reg,
+             manifest=ImageManifest(output_schema=SAME))
+    op = reg.pull("anon/manifested-cmd", command="--flag x")
+    op(make_partition((jnp.arange(4, dtype=jnp.int32),), 4))
+    assert seen["command"] == "--flag x"
+
+
+def test_optional_variadic_absent_preserves_kwargs():
+    op = pull("ubuntu", command="grep-count", codes=(2, 3))
+    assert op.params["codes"] == (2, 3)   # empty argv must not clobber
+
+
+def test_reduce_by_key_num_keys_required_without_key_space():
+    keys = np.arange(8, dtype=np.int32)
+    with pytest.raises(ValueError, match="num_keys not given"):
+        MaRe((keys,)).reduce_by_key(lambda r: r[0], op="sum")
+
+
+def test_key_by_type_checked_at_build():
+    vals = np.linspace(0, 1, 16, dtype=np.float32)
+    with pytest.raises(PlanTypeError, match="key_by must return one int"):
+        MaRe((vals,)).reduce_by_key(lambda r: r[0], op="sum", num_keys=4)
+    with pytest.raises(PlanTypeError, match="key_by must return one int"):
+        MaRe((vals,)).repartition_by(lambda r: r[0])
+
+
+def test_capacity_transfer_inferred_in_describe():
+    packed = pack_records([b"ACGTACGT"] * 3, capacity=8, width=8)
+    m = MaRe(packed, plan_cache=PlanCache()).map(image="kmer-stats", k=3)
+    # width 8, k=3: out capacity = per-shard cap * (8 - 3 + 1)
+    cap = m._dataset.capacity
+    d = m.describe()
+    assert f"(i32, i32)#{cap * 6}" in d
+    assert "{data: u8[8], len: i32}" in d        # input schema at boundary 0
+
+
+def test_capacity_transfer_failure_names_stage():
+    packed = pack_records([b"ACG"] * 8, capacity=8, width=3)
+    with pytest.raises(PlanTypeError, match="stage 0.*capacity transfer"):
+        MaRe(packed).map(image="kmer-stats", k=8)   # k=8 > width 3
+
+
+def test_monoid_resolution_via_manifest_sum_image():
+    keys = np.array([0, 1, 0, 1], np.int32)
+    vals = np.array([1.0, 2.0, 3.0, 4.0], np.float32)
+    m = MaRe((keys, vals), plan_cache=PlanCache()).reduce_by_key(
+        lambda r: r[0], value_by=lambda r: (r[1],),
+        image="toolbox/sum", num_keys=2)
+    assert m.plan.stages[-1].op == "sum"
+    out_keys, (out_sum,), _ = m.collect()
+    got = {int(k): float(s) for k, s in zip(out_keys, out_sum)}
+    assert got == {0: 4.0, 1: 6.0}
+
+
+# -- mount wiring (plan-time + execution-time) --------------------------------
+
+def test_mount_contract_checked_at_plan_time():
+    cache = PlanCache()
+    m = MaRe((np.arange(8, dtype=np.float32),), plan_cache=cache)
+    with pytest.raises(PlanTypeError) as exc:
+        m.map(image="toolbox/concat",
+              inputMountPoint=TextFile("/x", dtype=jnp.int32))
+    assert "stage 0" in str(exc.value)
+    assert "input mount" in str(exc.value)
+    assert cache.stats()["misses"] == 0
+
+
+def test_mount_validation_fires_at_execution_with_stage_and_image():
+    """Ops without manifests leave the schema unknown, so the mount check
+    falls through to stage execution — and must name stage + image."""
+
+    def to_float(part, **kw):
+        return make_partition(
+            (jax.tree.leaves(part.records)[0].astype(jnp.float32),),
+            part.count)
+
+    op1 = ContainerOp(image="anon/to-float", fn=to_float)
+    op2 = ContainerOp(
+        image="anon/wants-int", fn=lambda part, **kw: part,
+        input_mount=RecordMount("/x", dtype=jnp.int32))
+    m = (MaRe((np.arange(8, dtype=np.int32),), plan_cache=PlanCache())
+         .map(op=op1).map(op=op2))               # builds fine: schema unknown
+    with pytest.raises(ValueError) as exc:
+        m.collect()
+    msg = str(exc.value)
+    assert "stage 0" in msg and "anon/wants-int" in msg
+    assert "float32" in msg
+
+
+def test_reduce_mount_validation_fires_with_stage_and_image():
+    def passthrough(part, **kw):
+        return part
+
+    hide = ContainerOp(image="anon/hide", fn=passthrough)
+    red = ContainerOp(image="anon/reduce", fn=passthrough,
+                      associative_commutative=True,
+                      input_mount=RecordMount("/r", dtype=jnp.float64))
+    m = (MaRe((np.arange(8, dtype=np.int32),), plan_cache=PlanCache())
+         .map(op=hide).reduce(op=red))
+    with pytest.raises(ValueError) as exc:
+        m.collect()
+    msg = str(exc.value)
+    assert "stage 1" in msg and "anon/reduce" in msg
+
+
+# -- fn_image command forwarding (satellite) ----------------------------------
+
+def test_fn_image_forwards_command_string():
+    seen = {}
+
+    def tool(part, command="", **kw):
+        seen["command"] = command
+        return part
+
+    reg = Registry()
+    fn_image("anon/cmd-tool", tool, registry=reg)
+    op = reg.pull("anon/cmd-tool", command="frobnicate --fast")
+    part = make_partition((jnp.arange(4, dtype=jnp.int32),), 4)
+    op(part)
+    assert seen["command"] == "frobnicate --fast"
+
+
+def test_fn_image_without_command_param_still_works():
+    def plain(part):
+        return part
+
+    reg = Registry()
+    fn_image("anon/plain-tool", plain, registry=reg)
+    op = reg.pull("anon/plain-tool")
+    part = make_partition((jnp.arange(4, dtype=jnp.int32),), 4)
+    out = op(part)
+    assert out.capacity == 4
+
+
+def test_fn_image_with_manifest_participates_in_inference():
+    def doubler(part, **kw):
+        (x,) = part.records
+        return make_partition((x * 2,), part.count)
+
+    reg = Registry()
+    fn_image("anon/doubler", doubler, registry=reg,
+             manifest=ImageManifest(
+                 input_schema=Schema((field(jnp.int32),)),
+                 output_schema=SAME))
+    m = MaRe((np.arange(8, dtype=np.int32),), registry=reg,
+             plan_cache=PlanCache()).map(image="anon/doubler")
+    assert "(i32)" in m.describe()
+    with pytest.raises(PlanTypeError, match="input schema mismatch"):
+        MaRe((np.arange(8, dtype=np.float32),), registry=reg,
+             plan_cache=PlanCache()).map(image="anon/doubler")
+
+
+def test_shuffle_capacity_inference_matches_materialized():
+    """Post-shuffle inferred capacity must equal the real output capacity
+    (shuffle_partition: axis_size * send capacity), so downstream
+    capacity transfers and keyBy checks see the true shapes."""
+    m = (MaRe((np.arange(32, dtype=np.int32),), plan_cache=PlanCache())
+         .map(image="toolbox/concat")
+         .repartition_by(lambda r: r[0] % 3))
+    inferred = m._stage_states()[-1].capacity
+    assert inferred == m.dataset.capacity
+    # explicit send capacity: output is axis_size * capacity (no action —
+    # an undersized capacity would overflow at action time on 1 device)
+    m2 = (MaRe((np.arange(32, dtype=np.int32),), plan_cache=PlanCache())
+          .repartition_by(lambda r: r[0] % 3, capacity=16))
+    assert m2._stage_states()[-1].capacity == 16 * m2.num_partitions()
+
+
+def test_topk_image_handles_integer_scores():
+    op = pull("toolbox/topk", k=2)
+    part = make_partition((jnp.asarray([5, 9, 1, 7], jnp.int32),), 3)
+    out = op(part)                     # record 7 is masked out (count=3)
+    assert sorted(np.asarray(out.records[0])[:2].tolist()) == [5, 9]
+
+
+# -- grammar spec building ----------------------------------------------------
+
+def test_variadic_required_argument_enforced():
+    manifest = ImageManifest(commands=(
+        CommandSpec("need-args",
+                    args=(ArgSpec("xs", type=int, variadic=True),)),))
+    with pytest.raises(ValueError, match="missing required argument 'xs'"):
+        manifest.parse_command("need-args", image="anon/v")
+    _, params = manifest.parse_command("need-args 1 2", image="anon/v")
+    assert params == {"xs": (1, 2)}
+
+def test_custom_manifest_grammar_roundtrip():
+    manifest = ImageManifest(commands=(
+        CommandSpec("tool", args=(ArgSpec("n", type=int),
+                                  ArgSpec("names", required=False,
+                                          variadic=True))),))
+    spec, params = manifest.parse_command("tool 3 a b", image="anon/t")
+    assert spec.name == "tool"
+    assert params == {"n": 3, "names": ("a", "b")}
+    spec, params = manifest.parse_command("tool 3", image="anon/t")
+    assert params == {"n": 3}     # optional variadic absent: emits nothing
