@@ -18,9 +18,7 @@ SNP calling (paper Listing 3):
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

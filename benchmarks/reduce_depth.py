@@ -14,9 +14,12 @@ import sys
 HERE = os.path.dirname(__file__)
 
 WORKER = r'''
-import os, json, sys
+import json
+import os
+import sys
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, jax.numpy as jnp
+import jax
+import jax.numpy as jnp
 from repro import compat
 from jax.sharding import PartitionSpec as P
 sys.path.insert(0, "src")

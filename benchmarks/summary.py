@@ -37,6 +37,33 @@ def rows_for(result: dict):
                     yield f"{key}.{sub}", _fmt(sv)
 
 
+def cache_row(result: dict):
+    """Runtime materialization-cache columns (BENCH_interactive.json and
+    any future result reporting them): hit-rate and recompute avoided."""
+    if "cache_hit_rate" not in result \
+            and "recompute_avoided_stages" not in result:
+        return None
+    return (result.get("cache_hit_rate"),
+            result.get("recompute_avoided_stages"),
+            result.get("prefix_speedup"))
+
+
+def print_cache_table(results) -> None:
+    rows = [(name, cache_row(result)) for name, result in results]
+    rows = [(name, r) for name, r in rows if r is not None]
+    if not rows:
+        return
+    print("\n### Runtime materialization cache\n")
+    print("| bench | cache hit-rate | recompute avoided (stages) "
+          "| prefix speedup |")
+    print("| --- | --- | --- | --- |")
+    for name, (rate, avoided, speedup) in rows:
+        print(f"| {name} "
+              f"| {_fmt(rate) if rate is not None else '-'} "
+              f"| {_fmt(avoided) if avoided is not None else '-'} "
+              f"| {_fmt(speedup) + 'x' if speedup is not None else '-'} |")
+
+
 def main() -> int:
     bench_dir = sys.argv[1] if len(sys.argv) > 1 else "."
     paths = sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json")))
@@ -44,15 +71,18 @@ def main() -> int:
         print("No BENCH_*.json results found.")
         return 0
     print("## Benchmark results")
+    results = []
     for path in paths:
         with open(path) as f:
             result = json.load(f)
         name = result.get("bench", os.path.basename(path))
+        results.append((name, result))
         print(f"\n### {name} (`{os.path.basename(path)}`)\n")
         print("| metric | value |")
         print("| --- | --- |")
         for key, value in rows_for(result):
             print(f"| {key} | {value} |")
+    print_cache_table(results)
     return 0
 
 

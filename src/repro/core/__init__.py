@@ -7,7 +7,8 @@ transformations) standing in for Docker images.  See DESIGN.md.
 from repro.core.container import (ContainerOp, Partition, Registry,
                                   DEFAULT_REGISTRY, container_op,
                                   make_partition, pull, register)
-from repro.core.dataset import ShardedDataset, collect, from_host
+from repro.core.dataset import (ShardedDataset, collect,
+                                collect_first_shard, from_host)
 from repro.core.manifests import (ArgSpec, CommandSpec, Contract,
                                   ImageManifest, PRESERVE, PlanTypeError,
                                   SAME)
@@ -20,7 +21,7 @@ from repro.core.plan import (KEYED_MONOIDS, KeyedReduceStage, MapStage, Plan,
 from repro.core.schema import (Field, Schema, SchemaMismatch,
                                bytes_record_schema, field, schema_of_records)
 from repro.core.planner import (DEFAULT_CACHE, PlanCache, compile_plan,
-                                execute, program_key)
+                                program_key)
 from repro.core.shuffle import (ShuffleResult, grouped_all_to_all, hash_keys,
                                 keyed_bucket_capacity, shuffle_partition)
 from repro.core.tree_reduce import (broadcast_from_zero, fused_allreduce,
@@ -32,10 +33,20 @@ from repro.core.tree_reduce import (broadcast_from_zero, fused_allreduce,
                                     tree_reduce_partition)
 from repro.core import images as _images  # registers standard images
 
+
+def __getattr__(name):
+    # execution moved to the runtime layer (PR 5); `execute` stays
+    # importable from repro.core for back-compat, resolved lazily so
+    # neither package requires the other at module-import time
+    if name == "execute":
+        from repro.runtime.executor import execute
+        return execute
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 __all__ = [
     "MaRe", "ContainerOp", "Partition", "Registry", "DEFAULT_REGISTRY",
     "container_op", "make_partition", "pull", "register",
-    "ShardedDataset", "collect", "from_host",
+    "ShardedDataset", "collect", "collect_first_shard", "from_host",
     "Mount", "RecordMount", "FileSetMount", "TextFile", "BinaryFiles",
     "Plan", "MapStage", "ShuffleStage", "ReduceStage", "KeyedReduceStage",
     "KEYED_MONOIDS", "StageState", "infer_states",

@@ -23,6 +23,12 @@ class ShardedDataset:
     counts: jax.Array     # [n_shards] int32, valid records per shard
     mesh: Mesh
     axis: str = "data"
+    #: Lineage fingerprint (repro.runtime.lineage.Lineage) identifying how
+    #: this dataset was produced — root source id + canonical stage
+    #: signatures.  None = unknown provenance; the runtime executor
+    #: assigns a fresh host root on first action, so forked handles over
+    #: the same base dataset share a lineage prefix.
+    lineage: Any = None
 
     @property
     def num_shards(self) -> int:
@@ -43,8 +49,9 @@ class ShardedDataset:
 
     def with_records(self, records: Any, counts: Optional[jax.Array] = None
                      ) -> "ShardedDataset":
+        # records changed by an unknown transformation -> provenance lost
         return dataclasses.replace(
-            self, records=records,
+            self, records=records, lineage=None,
             counts=self.counts if counts is None else counts)
 
 
@@ -130,6 +137,23 @@ def from_shard_arrays(shard_records: Any, shard_counts: Sequence[int],
     counts = assemble(count_shards, n, ())
     return ShardedDataset(records=records, counts=counts, mesh=mesh,
                           axis=axis)
+
+
+def collect_first_shard(ds: ShardedDataset) -> Any:
+    """Shard 0's valid records (for reduced/replicated results).
+
+    Slices shard 0 on device and transfers only its valid rows to host —
+    a replicated reduce result would otherwise ship every shard's full
+    copy across just to keep the first.
+    """
+    n = ds.num_shards
+    rows = int(jax.device_get(ds.counts)[0])
+
+    def first(leaf):
+        cap = leaf.shape[0] // n  # per-leaf shard-0 block
+        return jax.device_get(leaf[:min(cap, rows)])
+
+    return jax.tree.map(first, ds.records)
 
 
 def collect(ds: ShardedDataset) -> Any:

@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import shlex
-from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple, Union
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 from repro.core.schema import (Schema, SchemaMismatch, substitute, unify)
 

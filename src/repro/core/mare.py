@@ -18,32 +18,36 @@ Ops are pulled from the registry by image name; a ``command`` string is
 passed to the image factory (images interpret their own command grammar,
 like a container ENTRYPOINT).
 
-All primitives are **lazy**: they append stages to a logical plan, and an
-action (``collect`` / ``collect_first_shard`` / ``cache`` / ``dataset``)
-hands the whole chain to :mod:`repro.core.planner`, which compiles it into
-a single ``shard_map`` program (memoized per pipeline shape) — so a
-``map -> repartitionBy -> map -> reduce`` chain is one locality-preserving
-job, not K independently launched stages.
+All primitives are **lazy**: they append stages to a logical plan.  MaRe
+itself is a thin facade — an action (``collect`` / ``collect_async`` /
+``collect_first_shard`` / ``persist`` / ``dataset``) hands the chain to
+the runtime layer (:mod:`repro.runtime`): the planner lowers it into a
+single memoized ``shard_map`` program, and the executor dispatches it,
+reusing any plan *prefix* previously materialized with :meth:`MaRe.
+persist` (lineage-keyed cache), syncing stage counters once, and
+appending an :class:`~repro.runtime.reports.ActionReport` to the shared
+per-chain history (``reports`` / ``last_diagnostics``).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, TYPE_CHECKING
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro import compat
 from repro.core import dataset as ds_lib
 from repro.core import planner as planner_lib
-from repro.core.container import (ContainerOp, Partition, Registry,
-                                  DEFAULT_REGISTRY, make_partition)
+from repro.core.container import (ContainerOp, Registry, DEFAULT_REGISTRY)
 from repro.core.dataset import ShardedDataset
 from repro.core.mounts import Mount
 from repro.core.plan import (KEYED_MONOIDS, Plan, StageState, infer_stage,
                              infer_states)
 from repro.core.schema import schema_of_records
+
+if TYPE_CHECKING:  # runtime imported lazily: core must not require
+    from repro.runtime.executor import ActionHandle, Executor  # noqa: F401
+    from repro.runtime.reports import ReportLog  # noqa: F401
 
 
 def _resolve_monoid(image: str, command: str, registry: Registry) -> str:
@@ -80,7 +84,9 @@ class MaRe:
 
     ``plan_cache`` overrides the process-wide compile cache (mostly for
     tests/benchmarks); ``fuse=False`` forces stage-at-a-time execution
-    (each stage its own program — the pre-planner schedule).
+    (each stage its own program — the pre-planner schedule); ``executor``
+    overrides the process-wide runtime engine (its materialization cache
+    is what ``persist()`` feeds).
     """
 
     def __init__(self, data: Any, mesh: Optional[Mesh] = None,
@@ -88,7 +94,13 @@ class MaRe:
                  registry: Registry = DEFAULT_REGISTRY,
                  _plan: Optional[Plan] = None,
                  plan_cache: Optional["planner_lib.PlanCache"] = None,
-                 fuse: bool = True):
+                 fuse: bool = True,
+                 executor: Optional[Executor] = None,
+                 _reports: Optional[ReportLog] = None):
+        # deferred: repro.runtime depends on core submodules, so importing
+        # it at core-module import time would be circular either way round
+        from repro.runtime.executor import DEFAULT_EXECUTOR
+        from repro.runtime.reports import ReportLog
         if isinstance(data, ShardedDataset):
             self._dataset = data
         else:
@@ -99,10 +111,11 @@ class MaRe:
         self.plan = _plan or Plan()
         self.plan_cache = plan_cache
         self.fuse = fuse
-        #: Per-counter totals from the most recent action on THIS handle
-        #: (keyed "stage<i>.<kind>", e.g. exchanged-record volume of a
-        #: reduce_by_key — see planner.execute diagnostics).
-        self.last_diagnostics: dict = {}
+        self.executor = executor if executor is not None else DEFAULT_EXECUTOR
+        #: Per-chain action history (shared across handles forked from this
+        #: one): every action appends an ActionReport here AND to the
+        #: executor's global history.
+        self.reports = _reports if _reports is not None else ReportLog()
         #: Inferred StageState per stage boundary (build-time type check);
         #: computed in _chain, reset when the plan materializes.
         self._states: Optional[list] = None
@@ -112,7 +125,8 @@ class MaRe:
                     axis: str = "data", capacity: Optional[int] = None,
                     width: Optional[int] = None,
                     workers: Optional[int] = None,
-                    registry: Registry = DEFAULT_REGISTRY) -> "MaRe":
+                    registry: Registry = DEFAULT_REGISTRY,
+                    executor: Optional[Executor] = None) -> "MaRe":
         """Ingest a :class:`repro.io.DataSource` (storage backend + format
         + split plan) into a sharded dataset via the parallel fetch pool —
         the paper's heterogeneous-storage entry point (Fig. 5)."""
@@ -121,7 +135,14 @@ class MaRe:
             mesh = compat.make_mesh((jax.device_count(),), (axis,))
         ds = ingest(source, mesh, axis=axis, capacity=capacity,
                     width=width, workers=workers)
-        return cls(ds, registry=registry)
+        return cls(ds, registry=registry, executor=executor)
+
+    @property
+    def last_diagnostics(self) -> dict:
+        """Counter totals of the NEWEST action on this chain (back-compat
+        view over ``reports`` — chaining no longer loses history)."""
+        latest = self.reports.latest
+        return latest.counters if latest is not None else {}
 
     def _initial_state(self) -> StageState:
         ds = self._dataset
@@ -137,7 +158,8 @@ class MaRe:
 
     def _chain(self, plan: Plan) -> "MaRe":
         m = MaRe(self._dataset, registry=self.registry, _plan=plan,
-                 plan_cache=self.plan_cache, fuse=self.fuse)
+                 plan_cache=self.plan_cache, fuse=self.fuse,
+                 executor=self.executor, _reports=self.reports)
         # type-check at BUILD time, incrementally: every primitive either
         # appends one stage or extends the trailing MapStage, so the
         # parent's inferred states are a valid prefix up to the new plan's
@@ -150,16 +172,17 @@ class MaRe:
         return m
 
     def _materialize(self) -> ShardedDataset:
-        """Run all pending stages as one fused program (memoized compile);
-        stage counters are checked once, after the single dispatch."""
+        """Run all pending stages through the runtime executor: one fused
+        program for the suffix not already materialized in the lineage
+        cache, one counter sync, one appended ActionReport."""
         if not self.plan.empty:
-            diag: dict = {}
-            self._dataset = planner_lib.execute(
-                self._dataset, self.plan, cache=self.plan_cache,
-                fuse=self.fuse, diagnostics=diag)
+            self._dataset, _ = self.executor.run(
+                self._dataset, self.plan, fuse=self.fuse,
+                plan_cache=self.plan_cache, reports=self.reports)
             self.plan = Plan()
             self._states = None
-            self.last_diagnostics = diag
+        else:
+            self.executor.ensure_lineage(self._dataset)
         return self._dataset
 
     @property
@@ -288,27 +311,66 @@ class MaRe:
 
     # -- actions ------------------------------------------------------------
 
+    def persist(self, tier: str = "device") -> "MaRe":
+        """Materialize the pending plan and register the result in the
+        runtime's lineage-keyed materialization cache (Spark
+        ``RDD.persist`` analogue).
+
+        ``tier="device"`` keeps the sharded arrays live on the mesh;
+        ``tier="host"`` stores a host copy that is re-placed on a hit.
+        The cache is budgeted LRU per tier (device evictions spill to
+        host, host evictions drop — recomputable from lineage).  After
+        ``persist()``, ANY handle whose plan prefix reaches this lineage
+        node — including forks of an ancestor handle rebuilding the same
+        stages — starts from the cached dataset and executes only the
+        suffix.
+        """
+        ds = self._materialize()
+        self.executor.persist(ds, tier=tier)
+        return MaRe(ds, registry=self.registry, plan_cache=self.plan_cache,
+                    fuse=self.fuse, executor=self.executor,
+                    _reports=self.reports)
+
     def cache(self) -> "MaRe":
-        """Materialize the pending plan (RDD.cache analogue)."""
-        return MaRe(self._materialize(), registry=self.registry,
-                    plan_cache=self.plan_cache, fuse=self.fuse)
+        """Sugar for :meth:`persist` (``tier="device"``).
+
+        Pre-runtime, ``cache()`` was an eager materialize on one handle
+        only; it now also registers the result under its lineage, so
+        sibling handles sharing the prefix reuse it.
+        """
+        return self.persist(tier="device")
 
     def collect(self) -> Any:
         """Run pending stages and gather valid records to host."""
         return ds_lib.collect(self._materialize())
 
+    def collect_async(self, label: Optional[str] = None) -> ActionHandle:
+        """Async ``collect``: dispatch on the executor's action thread
+        behind its bounded queue and return an :class:`ActionHandle`
+        (``.result()`` blocks, ``.report`` carries the ActionReport).
+
+        Snapshot semantics: the handle's pending plan is captured at call
+        time and this handle is left lazy (a later sync action on it
+        re-resolves against the materialization cache — persist first if
+        the prefix should be shared)."""
+        return self.executor.submit_action(
+            self._dataset, self.plan, finalize=ds_lib.collect,
+            fuse=self.fuse, plan_cache=self.plan_cache,
+            reports=self.reports, label=label)
+
     def collect_first_shard(self) -> Any:
-        """For reduced (replicated) results: shard 0's valid records."""
-        ds = self._materialize()
-        counts = jax.device_get(ds.counts)
-        n = ds.num_shards
+        """For reduced (replicated) results: shard 0's valid records
+        (sliced on device — only shard 0's valid rows cross to host)."""
+        return ds_lib.collect_first_shard(self._materialize())
 
-        def first(leaf):
-            host = jax.device_get(leaf)
-            cap = host.shape[0] // n  # per-leaf shard-0 block
-            return host[:min(cap, int(counts[0]))]
-
-        return jax.tree.map(first, ds.records)
+    def collect_first_shard_async(self, label: Optional[str] = None
+                                  ) -> ActionHandle:
+        """Async :meth:`collect_first_shard` (same snapshot semantics as
+        :meth:`collect_async`) — the wave runner's per-wave action."""
+        return self.executor.submit_action(
+            self._dataset, self.plan, finalize=ds_lib.collect_first_shard,
+            fuse=self.fuse, plan_cache=self.plan_cache,
+            reports=self.reports, label=label)
 
     def num_partitions(self) -> int:
         return self._dataset.num_shards
@@ -317,14 +379,19 @@ class MaRe:
         """Human-readable view of the pending stage DAG (no execution),
         annotated with the inferred record schema at every stage boundary
         (``{schema}#capacity``; ``?`` where an op without a manifest makes
-        it unknown)."""
+        it unknown).  Stages whose lineage node is materialized in the
+        runtime cache — i.e. the prefix an action would NOT re-execute —
+        are marked ``[cached]``."""
         states = self._stage_states()
+        cached, _ = self.executor.cached_prefix(self._dataset, self.plan)
         if self.plan.empty:
             chain = "<identity>"
         else:
             chain = " -> ".join(
                 f"{st.describe()} : {state.describe()}"
-                for st, state in zip(self.plan.stages, states[1:]))
+                + (" [cached]" if i < cached else "")
+                for i, (st, state) in enumerate(zip(self.plan.stages,
+                                                    states[1:])))
         return (f"MaRe(shards={self._dataset.num_shards}, "
                 f"cap={self._dataset.capacity}, "
                 f"schema={states[0].describe()}, "

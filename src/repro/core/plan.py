@@ -220,6 +220,11 @@ class Plan:
             key_by=key_by, op=op, num_keys=num_keys, value_by=value_by,
             combiner=combiner, capacity=capacity, use_kernel=use_kernel),))
 
+    def drop(self, n: int) -> "Plan":
+        """Plan with the first ``n`` stages removed (the suffix left to
+        execute after a materialization-cache prefix hit)."""
+        return Plan(stages=self.stages[n:]) if n else self
+
     @property
     def empty(self) -> bool:
         return not self.stages

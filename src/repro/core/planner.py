@@ -17,9 +17,10 @@ survey literature).  The planner delivers that on JAX:
   identical pipeline — the paper's Fig. 6 interactive workflow, or every
   wave of an out-of-core run — pays zero re-trace and zero re-compile.
 
-``execute(..., fuse=False)`` preserves the old stage-at-a-time schedule
-(each stage its own program, overflow synced mid-pipeline) for debugging
-and as the benchmark baseline (benchmarks/pipeline.py).
+This module is *lowering only*: actually dispatching a program, syncing
+its counters and recording diagnostics is the runtime layer's job
+(:mod:`repro.runtime.executor`, which also reuses materialized plan
+prefixes via the lineage cache).
 """
 from __future__ import annotations
 
@@ -29,14 +30,13 @@ from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core.container import Partition, make_partition
 from repro.core.dataset import ShardedDataset
-from repro.core.plan import (COUNTER_ERROR_KINDS, KeyedReduceStage, MapStage,
-                             Plan, ReduceStage, ShuffleStage, _apply_chain)
+from repro.core.plan import (KeyedReduceStage, MapStage, Plan, ReduceStage,
+                             ShuffleStage, _apply_chain)
 from repro.core.shuffle import keyed_bucket_capacity, shuffle_partition
 from repro.core.tree_reduce import (keyed_combine_partition,
                                     keyed_merge_partition,
@@ -263,73 +263,7 @@ def compile_plan(plan: Plan, ds: ShardedDataset,
     return cache.get_or_compile(key, build)
 
 
-def _check_counters(counter_vec: jax.Array,
-                    specs: Tuple[Tuple[int, str], ...], num_shards: int,
-                    diagnostics: Optional[Dict[str, int]] = None) -> None:
-    """One host sync for ALL stage counters, after the single dispatch.
-
-    Error kinds (shuffle drops, keyed overflow) raise; informational kinds
-    land in ``diagnostics`` (as do the error kinds, keyed
-    ``"stage<i>.<kind>"``) for benchmarks and post-mortems.
-    """
-    per = np.asarray(jax.device_get(counter_vec)).reshape(
-        num_shards, len(specs)).sum(axis=0)
-    if diagnostics is not None:
-        for (stage_idx, kind), total in zip(specs, per):
-            diagnostics[f"stage{stage_idx}.{kind}"] = int(total)
-    drops = [(stage_idx, int(total)) for (stage_idx, kind), total
-             in zip(specs, per) if kind == "shuffle_dropped" and total]
-    if drops:
-        total = sum(t for _, t in drops)
-        raise RuntimeError(
-            f"repartition_by overflow: {total} records dropped "
-            f"(per stage: {drops}); raise `capacity` (paper analogue: "
-            "partition exceeded tmpfs capacity — fall back to a larger "
-            "staging area)")
-    key_ovf = [(stage_idx, int(total)) for (stage_idx, kind), total
-               in zip(specs, per) if kind == "key_overflow" and total]
-    if key_ovf:
-        total = sum(t for _, t in key_ovf)
-        raise RuntimeError(
-            f"reduce_by_key key-table overflow: {total} records had keys "
-            f"outside [0, num_keys) (per stage: {key_ovf}); raise "
-            "`num_keys` or fix `key_by`")
-
-
-def execute(ds: ShardedDataset, plan: Plan, *,
-            cache: Optional[PlanCache] = None,
-            fuse: bool = True,
-            diagnostics: Optional[Dict[str, int]] = None) -> ShardedDataset:
-    """Run a whole plan against a dataset.
-
-    ``fuse=True`` (default): one compiled program for the entire DAG;
-    stage counters (shuffle overflow, keyed-reduce key overflow, exchange
-    volume) come back as outputs of that program and are checked once.
-    ``fuse=False``: stage-at-a-time execution (each stage its own program,
-    counters synced after each stage) — the pre-planner schedule, kept for
-    debugging and benchmarking.  ``diagnostics``, when given, is filled
-    with per-counter totals keyed ``"stage<i>.<kind>"``.
-    """
-    if plan.empty:
-        return ds
-    if not fuse:
-        for i, stage in enumerate(plan.stages):
-            sub: Optional[Dict[str, int]] = \
-                {} if diagnostics is not None else None
-            ds = execute(ds, Plan(stages=(stage,)), cache=cache, fuse=True,
-                         diagnostics=sub)
-            if sub:
-                diagnostics.update(
-                    (k.replace("stage0.", f"stage{i}.", 1), v)
-                    for k, v in sub.items())
-        return ds
-    prog = compile_plan(plan, ds, cache)
-    outs = prog(ds.records, ds.counts)
-    if prog.num_counters:
-        out_records, out_counts, counter_vec = outs
-        _check_counters(counter_vec, prog.counters, ds.num_shards,
-                        diagnostics)
-    else:
-        out_records, out_counts = outs
-    return ShardedDataset(records=out_records, counts=out_counts,
-                          mesh=ds.mesh, axis=ds.axis)
+# NOTE: action execution (dispatch, counter sync, prefix-cache reuse,
+# per-action reports) lives in repro.runtime.executor — this module stops
+# at lowering + program memoization.  ``repro.runtime.execute`` is the
+# bare dispatch engine; ``repro.runtime.Executor`` the full one.

@@ -12,7 +12,6 @@ and the benchmark consumes the real ingestion path.
 """
 from __future__ import annotations
 
-import dataclasses
 import os
 import threading
 import time

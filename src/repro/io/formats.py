@@ -15,7 +15,6 @@ read exactly once regardless of how files are carved.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, List, Optional
 
 import numpy as np

@@ -27,6 +27,7 @@ from repro.io.formats import pack_records
 from repro.io.source import DataSource
 from repro.io.splits import InputSplit, assign_splits
 from repro.kernels.common import round_up
+from repro.runtime.lineage import source_root
 
 #: Pack geometry is rounded up to these multiples so consecutive waves of
 #: similar size reuse one compiled executable instead of recompiling.
@@ -90,4 +91,11 @@ def ingest(source: DataSource, mesh: Mesh, axis: str = "data",
     counts = [len(r) for r in shard_recs]
     packed = (pack_records(recs, capacity=cap, width=w)
               for recs in shard_recs)  # lazy: packs during device transfer
-    return from_shard_arrays(packed, counts, mesh, axis)
+    ds = from_shard_arrays(packed, counts, mesh, axis)
+    # content-keyed lineage root: re-ingesting the same byte ranges with
+    # the same pack geometry reaches materializations persisted earlier
+    # (sources assumed immutable while cached — the HDFS/object-store
+    # model; see repro.runtime.lineage)
+    ds.lineage = source_root(type(backend).__name__, type(fmt).__name__,
+                             splits, cap, w)
+    return ds

@@ -9,7 +9,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Sequence, Union
 
-from repro.io.backends import LocalFS, StorageBackend, make_backend
+from repro.io.backends import StorageBackend, make_backend
 from repro.io.formats import (FastaFormat, LineFormat, RecordFormat,
                               SmilesFormat)
 from repro.io.splits import (DEFAULT_SPLIT_BYTES, InputSplit, plan_splits)

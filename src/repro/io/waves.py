@@ -6,15 +6,22 @@ byte-budgeted group of splits into one on-device ``ShardedDataset``, runs
 the pipeline, and releases the wave.  Per-wave reduce outputs are folded
 with the same (required-associative+commutative) combiner in a final MaRe
 reduce, so ``collect`` over a source that never fits on device at once is
-exact.  Wave *w+1* ingestion overlaps wave *w* compute via the
-:class:`~repro.data.pipeline.Prefetcher` (one-wave lookahead buffer).
+exact.
 
-Each wave executes the pipeline as ONE fused ``shard_map`` program via
-:mod:`repro.core.planner`; because ingestion buckets wave geometry
-(capacity/width rounding in :mod:`repro.io.ingest`) and the plan compile
-cache keys on (stage structure, shapes, mesh), the pipeline compiles once
-and every same-shaped wave is a cache hit — ``stats["programs_compiled"]``
-records how many distinct programs a run actually built.
+The wave loop runs on the SAME engine as every other MaRe action
+(:class:`repro.runtime.Executor`): each wave's pipeline is submitted as
+an async action on the executor's bounded dispatch queue, so wave *w*'s
+compile + device execution (executor thread) overlaps wave *w+1*'s
+fetch/pack/transfer (main thread behind the
+:class:`~repro.data.pipeline.Prefetcher`), and every wave appends its
+:class:`~repro.runtime.reports.ActionReport` to one shared diagnostics
+channel (``runner.reports``).
+
+Because ingestion buckets wave geometry (capacity/width rounding in
+:mod:`repro.io.ingest`) and the plan compile cache keys on (stage
+structure, shapes, mesh), the pipeline compiles once and every
+same-shaped wave is a cache hit — ``stats["programs_compiled"]`` records
+how many distinct programs a run actually built.
 """
 from __future__ import annotations
 
@@ -31,6 +38,8 @@ from repro.data.pipeline import Prefetcher
 from repro.io.ingest import ingest
 from repro.io.source import DataSource
 from repro.io.splits import InputSplit
+from repro.runtime.executor import DEFAULT_EXECUTOR, Executor
+from repro.runtime.reports import ReportLog
 
 
 def plan_waves(splits: Sequence[InputSplit], wave_bytes: Optional[int]
@@ -71,7 +80,8 @@ class WaveRunner:
                  width: Optional[int] = None,
                  registry: Registry = DEFAULT_REGISTRY,
                  prefetch: bool = True,
-                 plan_cache: Optional["planner_lib.PlanCache"] = None):
+                 plan_cache: Optional["planner_lib.PlanCache"] = None,
+                 executor: Optional[Executor] = None):
         if mesh is None:
             mesh = compat.make_mesh((jax.device_count(),), (axis,))
         self.source = source
@@ -84,6 +94,10 @@ class WaveRunner:
         self.registry = registry
         self.prefetch = prefetch
         self.plan_cache = plan_cache
+        self.executor = executor if executor is not None else DEFAULT_EXECUTOR
+        #: One diagnostics channel for the whole run: every wave action
+        #: (and the cross-wave fold) appends its ActionReport here.
+        self.reports = ReportLog()
         self._maps: List[Dict[str, Any]] = []
         self._reduce: Optional[Dict[str, Any]] = None
         self.stats: Dict[str, Any] = {}
@@ -108,18 +122,23 @@ class WaveRunner:
         return plan_waves(self.source.splits(), self.wave_bytes)
 
     def _pipeline(self, ds) -> MaRe:
-        m = MaRe(ds, registry=self.registry, plan_cache=self.plan_cache)
+        m = MaRe(ds, registry=self.registry, plan_cache=self.plan_cache,
+                 executor=self.executor, _reports=self.reports)
         for kw in self._maps:
             m = m.map(**kw)
         if self._reduce is not None:
             m = m.reduce(**self._reduce)
         return m
 
-    def _run_wave(self, ds) -> Any:
+    def _submit_wave(self, ds, idx: int):
+        """Queue one wave's pipeline on the executor's dispatch thread
+        (bounded queue: backpressure once ``max_pending`` waves are in
+        flight) and return its ActionHandle."""
         m = self._pipeline(ds)
+        label = f"wave {idx}"
         if self._reduce is not None:
-            return m.collect_first_shard()
-        return m.collect()
+            return m.collect_first_shard_async(label=label)
+        return m.collect_async(label=label)
 
     def _ingest_wave(self, wave: Sequence[InputSplit]):
         return ingest(self.source, self.mesh, axis=self.axis,
@@ -138,22 +157,33 @@ class WaveRunner:
                  else planner_lib.DEFAULT_CACHE)
         cache_before = cache.stats()
 
+        reports_before = self.reports.appended
         outputs: List[Any] = []
         if self.prefetch and len(waves) > 1:
-            # one-wave lookahead: wave w+1 fetch/pack/transfer overlaps
-            # wave w compute (at most two waves resident at once)
+            # one-wave ingest lookahead (Prefetcher) + async dispatch:
+            # wave w's compile+compute (executor thread) overlaps wave
+            # w+1's fetch/pack/transfer (prefetcher thread).  Wave w's
+            # result is awaited BEFORE pulling wave w+1 off the
+            # prefetcher, preserving the pre-runtime out-of-core memory
+            # bound: at most the computing wave plus the one the
+            # prefetcher is ingesting are device-resident.
             pf = Prefetcher(
                 lambda: (self._ingest_wave(w) for w in waves), capacity=1)
             try:
-                for _ in waves:
-                    outputs.append(self._run_wave(next(pf)))
+                pending = None
+                for i in range(len(waves)):
+                    if pending is not None:
+                        outputs.append(pending.result())
+                    pending = self._submit_wave(next(pf), i)
+                outputs.append(pending.result())
             finally:
                 pf.close()
         else:
-            for w in waves:
-                outputs.append(self._run_wave(self._ingest_wave(w)))
+            for i, w in enumerate(waves):
+                outputs.append(
+                    self._submit_wave(self._ingest_wave(w), i).result())
 
-        def snap_cache_stats():
+        def snap_stats():
             # taken at every return so the cross-wave fold program (when
             # it runs) is counted too
             cache_after = cache.stats()
@@ -161,30 +191,36 @@ class WaveRunner:
                                                - cache_before["misses"])
             self.stats["program_cache_hits"] = (cache_after["hits"]
                                                 - cache_before["hits"])
+            # lifetime append counter, not len(): the ReportLog deque is
+            # bounded, so len() would undercount runs with many waves
+            self.stats["actions"] = (self.reports.appended
+                                     - reports_before)
 
         if len(outputs) == 1:
-            snap_cache_stats()
+            snap_stats()
             return outputs[0]
 
         def cat(*ls):
-            ls = [np.asarray(l) for l in ls]
+            ls = [np.asarray(x) for x in ls]
             # waves may pack different record widths; pad trailing dims to
             # the common max before concatenating along records
-            tail = tuple(max(l.shape[d] for l in ls)
+            tail = tuple(max(x.shape[d] for x in ls)
                          for d in range(1, ls[0].ndim))
-            ls = [np.pad(l, [(0, 0)] + [(0, t - s) for t, s in
-                                        zip(tail, l.shape[1:])])
-                  for l in ls]
+            ls = [np.pad(x, [(0, 0)] + [(0, t - s) for t, s in
+                                        zip(tail, x.shape[1:])])
+                  for x in ls]
             return np.concatenate(ls, axis=0)
 
         stacked = jax.tree.map(cat, *outputs)
         if self._reduce is None:
-            snap_cache_stats()
+            snap_stats()
             return stacked
-        # fold per-wave partials with the same associative combiner
+        # fold per-wave partials with the same associative combiner — a
+        # plain MaRe action on the same executor/report channel
         fold = MaRe(stacked, mesh=self.mesh, axis=self.axis,
-                    registry=self.registry,
-                    plan_cache=self.plan_cache).reduce(**self._reduce)
+                    registry=self.registry, plan_cache=self.plan_cache,
+                    executor=self.executor,
+                    _reports=self.reports).reduce(**self._reduce)
         out = fold.collect_first_shard()
-        snap_cache_stats()
+        snap_stats()
         return out

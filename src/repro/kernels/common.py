@@ -8,7 +8,6 @@ pure-jnp oracles in each kernel's ``ref.py``.
 from __future__ import annotations
 
 import os
-from typing import Tuple
 
 import jax
 

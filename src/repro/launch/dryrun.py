@@ -19,10 +19,8 @@ import sys
 import time
 import traceback
 
-import jax
 
-from repro.configs import (ARCH_IDS, cells, get_config, get_shape,
-                           shape_skip_reason)
+from repro.configs import ARCH_IDS, get_config, get_shape, shape_skip_reason
 from repro.launch.dryrun_lib import dry_run_cell
 from repro.launch.mesh import make_production_mesh
 from repro.train.step import StepConfig

@@ -14,20 +14,17 @@ per-op wire-cost factors (ring algorithms):
 """
 from __future__ import annotations
 
-import dataclasses
-import json
 import re
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 from repro import compat
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.shapes import ShapeConfig
-from repro.models import Model, build_model
+from repro.models import build_model
 from repro.models.common import ModelConfig, param_count_analytic
 from repro.optim import adafactor, adamw
 from repro.optim.schedule import cosine_warmup

@@ -4,7 +4,6 @@ Importing this module never touches jax device state — meshes are built
 inside functions only."""
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 from jax.sharding import Mesh

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import sys
 
 import jax
@@ -21,7 +20,6 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, get_smoke_config
-from repro.data import Prefetcher, SyntheticText, lm_batches
 from repro.models import build_model
 from repro.optim import adamw
 from repro.optim.schedule import cosine_warmup
@@ -54,7 +52,6 @@ def main(argv=None) -> int:
     opt = adamw()
     state = init_train_state(model, opt, jax.random.PRNGKey(args.seed))
 
-    rngs = np.random.default_rng(args.seed)
 
     def batch_fn(step: int):
         r = np.random.default_rng(args.seed * 100003 + step)

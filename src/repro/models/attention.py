@@ -13,7 +13,7 @@ buffer), which is what makes hymba's long_500k cell O(window) per step.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

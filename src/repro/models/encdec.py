@@ -9,7 +9,7 @@ deviation recorded in configs/whisper_base.py).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -193,7 +193,6 @@ def prefill(params: Params, frames: jnp.ndarray, tokens: jnp.ndarray,
 def decode_step(params: Params, caches: List[Any], tokens: jnp.ndarray,
                 cfg: ModelConfig):
     """tokens: [B] one step with self-KV cache + static cross K/V."""
-    b = tokens.shape[0]
     new_caches: List[Any] = []
     x = jnp.take(params["embed"]["table"], tokens[:, None], axis=0)
     pos = caches[0]["self"].pos

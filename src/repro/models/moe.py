@@ -16,7 +16,6 @@ Dense reference path (no shard_map, exact) validates both.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -26,7 +25,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.shuffle import _pack_by_dest, unpack_gather
 from repro.models.common import ModelConfig, trunc_normal
-from repro.sharding import active, constrain
+from repro.sharding import active
 
 Params = Dict[str, Any]
 
@@ -154,7 +153,6 @@ def moe_ffn_sharded(p: Params, x: jnp.ndarray, cfg: ModelConfig,
         gates = gates.astype(dt)
         flat_e = idx.reshape(-1)                   # [tl*k] expert ids
         owner = flat_e // e_loc                    # destination model shard
-        src_slot = jnp.arange(tl * k, dtype=jnp.int32)
         flat_x = jnp.repeat(x2, k, axis=0).astype(dt)
         cap = max(1, int(tl * k / m * cfg.capacity_factor))
         part_records = (flat_x, flat_e.astype(jnp.int32))
@@ -178,7 +176,6 @@ def moe_ffn_sharded(p: Params, x: jnp.ndarray, cfg: ModelConfig,
         pack2 = _pack_by_dest((rx.astype(dt),), re_l, slot_ok, e_loc,
                               cap_e)
         (bx2,) = pack2.buffer
-        cnt_e = pack2.counts
         if mode == "token_gather" and f_shard > 1:
             # activation-stationary: replicate packed tokens over the fsdp
             # axes, compute the local f-slice, reduce-scatter partial sums

@@ -17,7 +17,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import ModelConfig, trunc_normal
-from repro.sharding import constrain
 
 Params = Dict[str, Any]
 
@@ -137,7 +136,6 @@ def ssm_block(p: Params, x: jnp.ndarray, cfg: ModelConfig,
     decode) and returns the updated state.
     """
     b, s, d = x.shape
-    di = d * max(cfg.ssm_expand, 1)
     xz = x @ p["in_proj"]                                 # [B, S, 2*di]
     xi, z = jnp.split(xz, 2, axis=-1)
     # depthwise causal conv along seq

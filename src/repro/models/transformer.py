@@ -12,10 +12,9 @@ caches are natural) — see ``decode_step``.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
+import numpy as _np
 import jax
 import jax.numpy as jnp
 
@@ -224,9 +223,6 @@ def lm_logical_axes(cfg: ModelConfig) -> Params:
     if cfg.family == "vlm" and cfg.num_patches:
         p["patch_proj"] = ("embed", None)
     return p
-
-
-import numpy as _np
 
 
 def layer_windows(cfg: ModelConfig) -> Optional[_np.ndarray]:
@@ -461,7 +457,6 @@ def decode_step(params: Params, caches: Any, tokens: jnp.ndarray,
         for i in range(cfg.num_layers):
             bp = jax.tree.map(lambda l: l[i], params["blocks"])
             c = caches[i]
-            aux = None
             h = apply_norm(cfg, bp["norm1"], x)
             if cfg.family == "hybrid":
                 a, kv = attn_lib.decode_attention(bp["attn"], h, c.kv, cfg)

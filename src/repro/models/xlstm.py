@@ -204,8 +204,6 @@ def slstm_block(p: Params, x: jnp.ndarray, cfg: ModelConfig,
                 ) -> Tuple[jnp.ndarray, Optional[SLSTMState]]:
     """Sequential sLSTM: x [B, S, d] -> y [B, S, d] (lax.scan over S)."""
     b, s, d = x.shape
-    H = cfg.num_heads
-    hd = d // H
     zx = jnp.einsum("bsd,dhk->sbhk", x, p["wz"]).astype(jnp.float32)
     ix = jnp.einsum("bsd,dhk->sbhk", x, p["wi"]).astype(jnp.float32)
     fx = jnp.einsum("bsd,dhk->sbhk", x, p["wf"]).astype(jnp.float32)

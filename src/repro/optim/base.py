@@ -4,7 +4,6 @@ from __future__ import annotations
 from typing import Any, Callable, NamedTuple
 
 import jax
-import jax.numpy as jnp
 
 
 class Optimizer(NamedTuple):

@@ -1,0 +1,26 @@
+"""repro.runtime — the action engine extracted from core.
+
+Layering (bottom-up): ``repro.io`` ingests bytes into sharded datasets,
+``repro.core.plan`` accumulates lazy stage DAGs with plan-time type
+inference, ``repro.core.planner`` lowers a DAG into one memoized
+``shard_map`` program, and **this package executes actions**: lineage
+fingerprints (:mod:`~repro.runtime.lineage`), the budgeted device/host
+materialization cache behind ``MaRe.persist()``
+(:mod:`~repro.runtime.cache`), the dispatch/counter-sync/report engine
+with async action handles (:mod:`~repro.runtime.executor`), and
+structured per-action diagnostics (:mod:`~repro.runtime.reports`).
+"""
+from repro.runtime.cache import (DEVICE_BUDGET_DEFAULT, HOST_BUDGET_DEFAULT,
+                                 CacheEntry, MaterializationCache,
+                                 estimate_nbytes)
+from repro.runtime.executor import (DEFAULT_EXECUTOR, ActionHandle,
+                                    Executor, check_counters, execute)
+from repro.runtime.lineage import Lineage, host_root, source_root
+from repro.runtime.reports import ActionReport, ReportLog
+
+__all__ = [
+    "ActionHandle", "ActionReport", "CacheEntry", "DEFAULT_EXECUTOR",
+    "DEVICE_BUDGET_DEFAULT", "Executor", "HOST_BUDGET_DEFAULT", "Lineage",
+    "MaterializationCache", "ReportLog", "check_counters",
+    "estimate_nbytes", "execute", "host_root", "source_root",
+]

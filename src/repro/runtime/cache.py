@@ -1,0 +1,250 @@
+"""Lineage-keyed materialization cache with budgeted device/host tiers.
+
+The result-cache half of interactive processing (paper §Conclusions /
+Fig. 6): ``MaRe.persist()`` registers a materialized
+:class:`~repro.core.dataset.ShardedDataset` under its lineage
+fingerprint, and any later action whose plan *prefix* reaches a cached
+lineage node starts from the cached dataset and only executes the
+suffix — the Spark ``RDD.cache()`` contract, which the compile cache
+alone (PR 2) could not provide.
+
+Budgeting: entry size is estimated from the dataset's record *schema* ×
+capacity × shard count (the PR 4 manifest machinery — no device sync
+needed), and each tier is a byte-budgeted LRU:
+
+* ``device`` — entries hold live sharded arrays; evicting spills the
+  entry to the ``host`` tier (one ``device_get``), mirroring Spark's
+  ``MEMORY -> DISK`` storage-level ladder (tmpfs -> staging dir in the
+  paper's container terms).
+* ``host`` — entries hold numpy copies plus the mesh geometry needed to
+  re-``device_put`` them on a hit; evicting drops the entry (it can
+  always be recomputed from lineage).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.dataset import ShardedDataset
+from repro.core.plan import Plan
+from repro.core.schema import schema_of_records
+from repro.runtime.lineage import Lineage
+
+TIERS = ("device", "host")
+
+
+def estimate_nbytes(ds: ShardedDataset) -> int:
+    """Schema-based size estimate: itemsize x record shape x capacity x
+    shards per leaf, plus the counts vector (no device transfer)."""
+    schema = schema_of_records(ds.records)
+    rows = ds.capacity * ds.num_shards
+    total = ds.num_shards * 4    # counts: int32 per shard
+    for f in jax.tree.leaves(schema.fields):
+        per_record = int(np.prod(f.shape)) if f.shape else 1
+        total += np.dtype(f.dtype).itemsize * per_record * rows
+    return int(total)
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    """One materialized lineage node, resident in exactly one tier."""
+
+    lineage: Lineage
+    tier: str                        # "device" | "host"
+    nbytes: int
+    dataset: Optional[ShardedDataset] = None       # device tier
+    host_records: Any = None                       # host tier (numpy)
+    host_counts: Optional[np.ndarray] = None
+    mesh: Any = None
+    axis: str = "data"
+
+
+#: Default per-tier budgets: every ``persist()``/``cache()`` pins its
+#: materialization in the process-wide store, so the defaults are FINITE
+#: — without them, a loop persisting distinct lineages would grow device
+#: memory monotonically with no eviction.  Raise (or pass ``None`` for
+#: unbounded) on machines where more residency is wanted.
+DEVICE_BUDGET_DEFAULT = 1 << 30   # 1 GiB estimated device-resident bytes
+HOST_BUDGET_DEFAULT = 4 << 30     # 4 GiB spilled host copies
+
+
+class MaterializationCache:
+    """Budgeted two-tier LRU store of materialized datasets by lineage.
+
+    ``device_budget_bytes`` / ``host_budget_bytes`` bound the estimated
+    resident bytes per tier; ``None`` means unbounded.  One shared LRU
+    order spans both tiers (a device hit and a host hit both refresh
+    recency), but budgets and eviction are per tier: device evicts by
+    spilling to host, host evicts by dropping.
+    """
+
+    def __init__(self,
+                 device_budget_bytes: Optional[int] = DEVICE_BUDGET_DEFAULT,
+                 host_budget_bytes: Optional[int] = HOST_BUDGET_DEFAULT
+                 ) -> None:
+        self.device_budget_bytes = device_budget_bytes
+        self.host_budget_bytes = host_budget_bytes
+        self._entries: "OrderedDict[Lineage, CacheEntry]" = OrderedDict()
+        # persist() runs on the caller's thread while async actions hit
+        # the store from the executor's dispatch thread — every public
+        # method takes this lock
+        self._lock = threading.RLock()
+        self.hits = 0
+        self.host_hits = 0
+        self.misses = 0
+        self.puts = 0
+        self.spills = 0
+        self.drops = 0
+
+    # -- accounting ----------------------------------------------------------
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def tier_bytes(self, tier: str) -> int:
+        with self._lock:
+            return sum(e.nbytes for e in self._entries.values()
+                       if e.tier == tier)
+
+    def entry(self, lineage: Lineage) -> Optional[CacheEntry]:
+        """Peek without touching recency or stats (describe/tests)."""
+        with self._lock:
+            return self._entries.get(lineage)
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"entries": len(self._entries),
+                    "device_bytes": self.tier_bytes("device"),
+                    "host_bytes": self.tier_bytes("host"),
+                    "hits": self.hits, "host_hits": self.host_hits,
+                    "misses": self.misses, "puts": self.puts,
+                    "spills": self.spills, "drops": self.drops}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+    # -- put / eviction ------------------------------------------------------
+
+    def put(self, ds: ShardedDataset, tier: str = "device") -> CacheEntry:
+        """Register a materialized dataset under its lineage (idempotent
+        per lineage: a re-persist refreshes recency, and promotes a
+        host-tier entry when asked for device residency)."""
+        if tier not in TIERS:
+            raise ValueError(f"unknown persist tier {tier!r}; "
+                             f"expected one of {TIERS}")
+        if ds.lineage is None:
+            raise ValueError("dataset has no lineage fingerprint; persist "
+                             "through MaRe/Executor, not raw datasets")
+        with self._lock:
+            existing = self._entries.get(ds.lineage)
+            if existing is not None and existing.tier == tier:
+                self._entries.move_to_end(ds.lineage)
+                return existing
+            entry = CacheEntry(lineage=ds.lineage, tier=tier,
+                               nbytes=estimate_nbytes(ds),
+                               mesh=ds.mesh, axis=ds.axis)
+            if tier == "device":
+                entry.dataset = ds
+            else:
+                self._to_host(entry, ds)
+            self._entries[ds.lineage] = entry
+            self._entries.move_to_end(ds.lineage)
+            self.puts += 1
+            self._enforce_budgets()
+            return entry
+
+    def _to_host(self, entry: CacheEntry, ds: ShardedDataset) -> None:
+        # NB: runs under self._lock (put/_enforce_budgets), so a large
+        # spill stalls concurrent lookups for the device_get's duration —
+        # the price of atomic tier accounting; budgets keep spills rare
+        entry.host_records = jax.tree.map(
+            lambda leaf: np.asarray(jax.device_get(leaf)), ds.records)
+        entry.host_counts = np.asarray(jax.device_get(ds.counts))
+        entry.dataset = None
+        entry.tier = "host"
+
+    def _enforce_budgets(self) -> None:
+        # device -> host spill, LRU first
+        if self.device_budget_bytes is not None:
+            while self.tier_bytes("device") > self.device_budget_bytes:
+                victim = next((e for e in self._entries.values()
+                               if e.tier == "device"), None)
+                if victim is None:
+                    break
+                self._to_host(victim, victim.dataset)
+                self.spills += 1
+        # host drop, LRU first
+        if self.host_budget_bytes is not None:
+            while self.tier_bytes("host") > self.host_budget_bytes:
+                victim_key = next((k for k, e in self._entries.items()
+                                   if e.tier == "host"), None)
+                if victim_key is None:
+                    break
+                del self._entries[victim_key]
+                self.drops += 1
+
+    # -- lookup --------------------------------------------------------------
+
+    def get(self, lineage: Lineage) -> Optional[ShardedDataset]:
+        """Dataset for an exact lineage node, or None.  Host-tier hits are
+        re-placed onto the mesh (and stay host-resident — promotion back
+        to the device tier is the caller's persist decision)."""
+        with self._lock:
+            entry = self._entries.get(lineage)
+            if entry is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(lineage)
+            self.hits += 1
+            if entry.tier == "device":
+                return entry.dataset
+            self.host_hits += 1
+            sharding = NamedSharding(entry.mesh, P(entry.axis))
+            records = jax.tree.map(
+                lambda leaf: jax.device_put(leaf, sharding),
+                entry.host_records)
+            counts = jax.device_put(entry.host_counts, sharding)
+            return ShardedDataset(records=records, counts=counts,
+                                  mesh=entry.mesh, axis=entry.axis,
+                                  lineage=lineage)
+
+    def longest_prefix(self, root: Lineage, plan: Plan
+                       ) -> Tuple[int, Optional[Lineage]]:
+        """Longest plan prefix (stage count, lineage) materialized here.
+
+        Scans from the full plan down to one stage; ``(0, None)`` when no
+        prefix (not even the whole plan) is cached.  Pure lookup on keys —
+        no data touched and no stats touched, so ``describe()`` may call
+        it freely.
+        """
+        with self._lock:
+            for i in range(len(plan.stages), 0, -1):
+                lin = root.extend(plan, upto=i)
+                if lin in self._entries:
+                    return i, lin
+            return 0, None
+
+    def lookup_prefix(self, root: Lineage, plan: Plan
+                      ) -> Tuple[int, Optional[str],
+                                 Optional[ShardedDataset]]:
+        """Atomic longest-prefix lookup + fetch for an action: returns
+        ``(stages, tier, dataset)``, or ``(0, None, None)`` — counted as
+        one miss — when no prefix is materialized.  Atomicity matters:
+        a concurrent ``persist()`` may evict the entry between a bare
+        ``longest_prefix`` and ``get``, which would mis-report the
+        serving tier."""
+        with self._lock:
+            k, lin = self.longest_prefix(root, plan)
+            if not k:
+                self.misses += 1
+                return 0, None, None
+            tier = self._entries[lin].tier
+            return k, tier, self.get(lin)

@@ -1,0 +1,87 @@
+"""Structured per-action diagnostics: a history, not an overwritten dict.
+
+Every action the executor dispatches produces one :class:`ActionReport`
+— the plan that ran, how much of its prefix was served from the
+materialization cache, the program's counter totals (shuffle drops,
+key-table overflow, exchanged-record volume), and compile-cache deltas.
+Reports accumulate in a bounded :class:`ReportLog`, so an interactive
+session can inspect *every* query it ran; ``MaRe.last_diagnostics``
+remains as a back-compat view over the newest report's counters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, Iterator, Optional
+
+
+@dataclasses.dataclass
+class ActionReport:
+    """Diagnostics of one executed action (one plan dispatch)."""
+
+    action_id: int
+    plan: str                       # human-readable stage chain
+    total_stages: int
+    cached_stages: int = 0          # prefix stages served from the cache
+    cache_tier: Optional[str] = None   # tier the prefix hit came from
+    lineage: Optional[str] = None   # result lineage digest
+    counters: Dict[str, int] = dataclasses.field(default_factory=dict)
+    programs_compiled: int = 0      # compile-cache misses this action
+    program_cache_hits: int = 0
+    wall_s: float = 0.0
+    label: Optional[str] = None     # e.g. "wave 3" on the wave path
+
+    @property
+    def executed_stages(self) -> int:
+        return self.total_stages - self.cached_stages
+
+    def describe(self) -> str:
+        hit = (f", cached_prefix={self.cached_stages}/{self.total_stages}"
+               f" ({self.cache_tier})" if self.cached_stages else "")
+        tag = f" [{self.label}]" if self.label else ""
+        return (f"action#{self.action_id}{tag}: {self.plan}{hit}, "
+                f"compiled={self.programs_compiled}, "
+                f"wall={self.wall_s * 1e3:.1f}ms")
+
+
+class ReportLog:
+    """Bounded FIFO history of :class:`ActionReport`."""
+
+    def __init__(self, maxlen: int = 256) -> None:
+        self._reports: Deque[ActionReport] = deque(maxlen=maxlen)
+        self._next_id = 0
+        #: Lifetime append count (NOT bounded by ``maxlen`` — use this,
+        #: not ``len()``, to count actions over a long run).
+        self.appended = 0
+
+    def new_id(self) -> int:
+        i = self._next_id
+        self._next_id += 1
+        return i
+
+    def append(self, report: ActionReport) -> None:
+        self._reports.append(report)
+        self.appended += 1
+
+    @property
+    def latest(self) -> Optional[ActionReport]:
+        return self._reports[-1] if self._reports else None
+
+    def __len__(self) -> int:
+        return len(self._reports)
+
+    def __iter__(self) -> Iterator[ActionReport]:
+        return iter(self._reports)
+
+    def __getitem__(self, i) -> ActionReport:
+        return list(self._reports)[i]
+
+    def total(self, counter: str) -> int:
+        """Sum of one counter kind across all retained reports (suffix
+        matching: ``total("exchanged_records")`` sums every stage)."""
+        acc = 0
+        for r in self._reports:
+            for key, v in r.counters.items():
+                if key == counter or key.endswith("." + counter):
+                    acc += v
+        return acc

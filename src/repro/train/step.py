@@ -19,18 +19,16 @@ leading microbatch axis.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 from repro import compat
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.tree_reduce import tree_allreduce
 from repro.models import Model
-from repro.optim import (Optimizer, apply_updates, clip_by_global_norm,
-                         global_norm)
+from repro.optim import Optimizer, apply_updates, clip_by_global_norm
 from repro.optim.compression import error_feedback_compress, init_residual
 from repro.sharding import Rules, use_rules
 

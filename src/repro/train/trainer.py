@@ -12,8 +12,6 @@ import time
 from typing import Any, Callable, Dict, Iterator, List, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.train.step import TrainState

@@ -2,7 +2,6 @@
 reduced arch of each family (the full 512-dev dry-run is launch/dryrun.py)."""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax
 from repro import compat
 from repro.configs import get_smoke_config
 from repro.launch.dryrun_lib import dry_run_cell

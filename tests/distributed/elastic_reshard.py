@@ -1,7 +1,9 @@
 """Checkpoint on an 8-shard mesh, restore onto a 4-shard mesh (elastic)."""
-import os, tempfile
+import os
+import tempfile
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import numpy as np, jax, jax.numpy as jnp
+import jax
+import jax.numpy as jnp
 from repro import compat
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import CheckpointManager

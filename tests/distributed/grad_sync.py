@@ -1,7 +1,9 @@
 """mare_tree (paper) vs fused (XLA) gradient sync: identical updates."""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import numpy as np, jax, jax.numpy as jnp
+import jax
+import jax.numpy as jnp
+import numpy as np
 from repro import compat
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.models import build_model

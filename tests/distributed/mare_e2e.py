@@ -2,7 +2,8 @@
 repartition_by colocation + multiset preservation."""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import numpy as np, jax, jax.numpy as jnp
+import jax
+import numpy as np
 from repro.core import MaRe, TextFile
 
 rng = np.random.default_rng(0)

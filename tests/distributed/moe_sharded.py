@@ -1,7 +1,9 @@
 """Sharded MoE (both layouts) == dense reference on a 2x4 mesh."""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import numpy as np, jax, jax.numpy as jnp
+import jax
+import jax.numpy as jnp
+import numpy as np
 from repro import compat
 from repro.models.common import ModelConfig
 from repro.models import moe as moe_lib

@@ -1,7 +1,9 @@
 """Context-parallel SSM == unsharded ssm_block (seq sharded over 8)."""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import numpy as np, jax, jax.numpy as jnp
+import jax
+import jax.numpy as jnp
+import numpy as np
 from repro import compat
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.models.common import ModelConfig

@@ -3,7 +3,6 @@ import os
 
 import jax
 from repro import compat
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -71,7 +70,6 @@ def test_shardings_for_params_divisibility(tmp_path):
     """Elastic restore builds divisibility-safe shardings from logical
     axes (the N->M mesh rescale path)."""
     import jax
-    from jax.sharding import PartitionSpec as P
     from repro.checkpoint import shardings_for_params
     from repro.models import build_model
     from repro.sharding import make_rules

@@ -1,13 +1,11 @@
 """Core MaRe semantics on a single device (shard count 1)."""
-import jax
 from repro import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (MaRe, TextFile, BinaryFiles, RecordMount,
-                        FileSetMount, from_host, collect, pull,
-                        split_factors)
+from repro.core import (MaRe, TextFile, RecordMount, FileSetMount, from_host,
+                        collect, pull, split_factors)
 from repro.core.container import make_partition
 from repro.core.tree_reduce import collective_bytes_tree
 
@@ -35,7 +33,7 @@ def test_map_is_lazy_and_fused():
 
 
 def test_reduce_requires_assoc_commutative():
-    from repro.core.container import ContainerOp, Partition
+    from repro.core.container import ContainerOp
 
     def not_ac(part, **kw):
         return part

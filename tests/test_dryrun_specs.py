@@ -1,11 +1,9 @@
 """input_specs / rules_for coverage for every assigned cell (no
 compilation — structural checks only)."""
-import jax
 import pytest
 
-from repro.configs import (ARCH_IDS, cells, get_config, get_shape,
-                           shape_skip_reason)
-from repro.launch.dryrun_lib import input_specs, rules_for
+from repro.configs import ARCH_IDS, cells, get_config, shape_skip_reason
+from repro.launch.dryrun_lib import input_specs
 from repro.configs.shapes import SHAPES
 
 

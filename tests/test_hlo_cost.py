@@ -2,8 +2,6 @@
 roofline numbers depend on it (launch/hlo_cost.py)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.launch.hlo_cost import analyze
 

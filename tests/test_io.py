@@ -6,11 +6,10 @@ import pytest
 
 from repro import compat
 from repro.core import MaRe, collect
-from repro.io import (BACKEND_PROFILES, DataSource, EmulatedObjectStore,
-                      FastaFormat, LineFormat, LocalFS, SmilesFormat,
-                      assign_splits, fasta_source, ingest, make_backend,
-                      pack_records, plan_splits, text_source,
-                      unpack_records)
+from repro.io import (BACKEND_PROFILES, EmulatedObjectStore, FastaFormat,
+                      LineFormat, LocalFS, SmilesFormat, assign_splits,
+                      fasta_source, ingest, make_backend, pack_records,
+                      plan_splits, text_source, unpack_records)
 
 
 @pytest.fixture

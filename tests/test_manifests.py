@@ -9,7 +9,7 @@ from repro.core import (ArgSpec, CommandSpec, ImageManifest, MaRe, PlanCache,
                         PlanTypeError, RecordMount, Registry, SAME, Schema,
                         SchemaMismatch, TextFile, bytes_record_schema, field,
                         pull, schema_of_records)
-from repro.core.container import ContainerOp, container_op, make_partition
+from repro.core.container import ContainerOp, make_partition
 from repro.core.images import fn_image
 from repro.core.schema import substitute, unify
 from repro.io.formats import FORMATS, pack_records

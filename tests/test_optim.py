@@ -74,5 +74,4 @@ def test_error_feedback_carries_residual():
     res = init_residual(grads)
     _, deq, res = error_feedback_compress(grads, res)
     # residual holds what quantization lost; next round recovers it
-    total = jnp.abs(res["w"]) + jnp.abs(deq["w"] - grads["w"])
     assert float(jnp.max(jnp.abs(deq["w"] + res["w"] - grads["w"]))) < 1e-6

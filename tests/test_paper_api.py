@@ -2,7 +2,6 @@
 ``outputMountPoint=``, ``repartitionBy``, ``reduceByKey``, and the
 ``TextFile`` / ``BinaryFiles`` mount aliases — each through a full
 action (the listings must keep working verbatim over the manifest API)."""
-import jax
 import numpy as np
 import pytest
 

@@ -10,10 +10,10 @@ import pytest
 
 from repro import compat
 from repro.core import (KeyedReduceStage, MaRe, MapStage, Plan, PlanCache,
-                        ReduceStage, ShuffleStage, execute, from_host,
-                        hash_keys, keyed_bucket_capacity, shuffle_partition)
+                        ShuffleStage, from_host, hash_keys,
+                        keyed_bucket_capacity, shuffle_partition)
 from repro.core import planner as planner_lib
-from repro.core.container import ContainerOp, Partition, make_partition
+from repro.core.container import ContainerOp, make_partition
 from jax.sharding import PartitionSpec as P
 
 

@@ -1,9 +1,7 @@
 """Logical-axis rules: divisibility-safe TP and axis-reuse refusal."""
-import jax
-import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.sharding import Rules, data_only_rules, make_rules
+from repro.sharding import Rules
 
 
 def _mesh_shape():
