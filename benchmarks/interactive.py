@@ -108,15 +108,23 @@ def run_mode(ds, mesh, k: int, num_keys: int, persist_prefix: bool,
 
     before = cache.stats()
     times = []
+    phase_tot: Dict[str, float] = {}
     for _ in range(reps):
         for op in QUERY_OPS:
             t0 = time.monotonic()
             query(op)
             times.append(time.monotonic() - t0)
+            for p, s in ex.reports.latest.phases.items():
+                phase_tot[p] = phase_tot.get(p, 0.0) + s
+
     after = cache.stats()
 
     r["results"] = results
     r["measured_queries"] = reps * len(QUERY_OPS)
+    # per-measured-query phase means: in the cached mode the dispatch is
+    # suffix-only, which is where the prefix speedup shows up
+    r["query_phase_mean_s"] = {p: round(s / (reps * len(QUERY_OPS)), 6)
+                               for p, s in phase_tot.items()}
     r["measured_programs_compiled"] = after["misses"] - before["misses"]
     r["query_mean_s"] = float(np.mean(times))
     r["query_min_s"] = float(np.min(times))

@@ -41,6 +41,7 @@ import jax                                           # noqa: E402
 
 from repro.core import MaRe, PlanCache               # noqa: E402
 from repro import compat                             # noqa: E402
+from repro.obs import TRACER                         # noqa: E402
 
 READ_LEN = 64
 #: key + summed value + per-key record count, all int32 (the exchanged
@@ -107,9 +108,13 @@ def run_mode(ds, mesh, k: int, num_keys: int, mode: Dict,
     got = {int(a): int(b) for a, b in zip(keys, occ)}
     assert got == expected, "k-mer table mismatch vs numpy reference"
     exchanged = m.last_diagnostics["stage1.exchanged_records"]
+    rep = m.reports.latest
     r = {
         "compiles": cache.stats()["misses"],
         "cold_s": cold,
+        # where the cold action's wall went: plan.build / plan.lower /
+        # plan.compile / dispatch / device_wait / counter_sync seconds
+        "phases_cold": {p: round(s, 6) for p, s in rep.phases.items()},
         "exchanged_records": exchanged,
         "exchanged_bytes": exchanged * ROW_BYTES,
         "key_overflow": m.last_diagnostics["stage1.key_overflow"],
@@ -123,15 +128,21 @@ def run_warm(ds, mesh, k: int, num_keys: int, modes: Dict[str, Dict],
     """Interleave warm reps across modes (scheduler-noise fairness, as in
     benchmarks/pipeline.py)."""
     times = {name: [] for name in modes}
+    phase_acc: Dict[str, Dict[str, float]] = {name: {} for name in modes}
     for _ in range(reps):
         for name, mode in modes.items():
             cache = results[name]["cache"]
             t0 = time.monotonic()
-            build_pipeline(ds, mesh, cache, k, num_keys, mode).collect()
+            m = build_pipeline(ds, mesh, cache, k, num_keys, mode)
+            m.collect()
             times[name].append(time.monotonic() - t0)
+            for p, s in m.reports.latest.phases.items():
+                phase_acc[name][p] = phase_acc[name].get(p, 0.0) + s
     for name, r in results.items():
         r["warm_mean_s"] = float(np.mean(times[name]))
         r["warm_min_s"] = float(np.min(times[name]))
+        r["phases_warm_mean"] = {p: round(s / reps, 6)
+                                 for p, s in phase_acc[name].items()}
         r["recompiles_on_rerun"] = r["cache"].stats()["misses"] \
             - r["compiles"]
         r["cache"] = r.pop("cache").stats()
@@ -142,7 +153,12 @@ def main() -> Dict:
     ap.add_argument("--small", action="store_true",
                     help="CI smoke mode: tiny dataset, few reps")
     ap.add_argument("--out", default="BENCH_kmer.json")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export a Chrome-trace JSON of the whole run "
+                         "(load it in https://ui.perfetto.dev)")
     args = ap.parse_args()
+    if args.trace_out:
+        TRACER.start()
 
     n_reads = 1_024 if args.small else 8_192
     k = 5 if args.small else 6
@@ -202,6 +218,12 @@ def main() -> Dict:
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {args.out}")
+    if args.trace_out:
+        TRACER.stop()
+        TRACER.export(args.trace_out)
+        print(f"wrote {args.trace_out} "
+              f"({TRACER.events_total} events, "
+              f"{TRACER.events_dropped} dropped)")
     return out
 
 

@@ -64,6 +64,32 @@ def print_cache_table(results) -> None:
               f"| {_fmt(speedup) + 'x' if speedup is not None else '-'} |")
 
 
+def phase_rows(name: str, result: dict):
+    """Per-phase wall breakdowns: any nested dict field whose name
+    mentions 'phase' maps phase -> seconds (e.g. kmer's ``phases_cold``
+    per mode, interactive's ``query_phase_mean_s`` per mode)."""
+    for mode, sub in result.items():
+        if not isinstance(sub, dict):
+            continue
+        for key, val in sub.items():
+            if "phase" not in key or not isinstance(val, dict):
+                continue
+            for phase, s in sorted(val.items(), key=lambda kv: -kv[1]):
+                yield name, f"{mode}.{key}", phase, s
+
+
+def print_phase_table(results) -> None:
+    rows = [row for name, result in results
+            for row in phase_rows(name, result)]
+    if not rows:
+        return
+    print("\n### Phase breakdown\n")
+    print("| bench | mode | phase | seconds |")
+    print("| --- | --- | --- | --- |")
+    for bench, mode, phase, s in rows:
+        print(f"| {bench} | {mode} | {phase} | {_fmt(s)} |")
+
+
 def main() -> int:
     bench_dir = sys.argv[1] if len(sys.argv) > 1 else "."
     paths = sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json")))
@@ -83,6 +109,7 @@ def main() -> int:
         for key, value in rows_for(result):
             print(f"| {key} | {value} |")
     print_cache_table(results)
+    print_phase_table(results)
     return 0
 
 

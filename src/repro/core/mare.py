@@ -375,13 +375,35 @@ class MaRe:
     def num_partitions(self) -> int:
         return self._dataset.num_shards
 
+    # -- observability -------------------------------------------------------
+
+    def trace_to(self, path: str) -> str:
+        """Export everything the process-wide tracer has recorded as
+        Chrome-trace JSON (load at https://ui.perfetto.dev) and return
+        ``path``.  Recording must be on — wrap the session (or the
+        interesting actions) in ``repro.obs.tracing()`` or call
+        ``repro.obs.TRACER.start()`` first; the instrumentation itself
+        is always present and costs one branch per site while off."""
+        from repro.obs import TRACER
+        return TRACER.export(path)
+
+    def metrics(self) -> dict:
+        """Snapshot of the process-wide metrics registry: cache hits and
+        evictions per tier, compile-cache hits/misses, exchanged-record
+        volume, dispatch-queue depth, per-phase wall histograms."""
+        from repro.obs import METRICS
+        return METRICS.snapshot()
+
     def describe(self) -> str:
         """Human-readable view of the pending stage DAG (no execution),
         annotated with the inferred record schema at every stage boundary
         (``{schema}#capacity``; ``?`` where an op without a manifest makes
         it unknown).  Stages whose lineage node is materialized in the
         runtime cache — i.e. the prefix an action would NOT re-execute —
-        are marked ``[cached]``."""
+        are marked ``[cached]``.  A ``counters=[...]`` section lists
+        every diagnostic counter the fused program will emit (stage
+        index + kind), i.e. what an action's report will contain before
+        anything runs."""
         states = self._stage_states()
         cached, _ = self.executor.cached_prefix(self._dataset, self.plan)
         if self.plan.empty:
@@ -392,7 +414,10 @@ class MaRe:
                 + (" [cached]" if i < cached else "")
                 for i, (st, state) in enumerate(zip(self.plan.stages,
                                                     states[1:])))
+        specs = self.plan.counter_specs()
+        counters = (", counters=[" + ", ".join(
+            f"stage{i}.{kind}" for i, kind in specs) + "]") if specs else ""
         return (f"MaRe(shards={self._dataset.num_shards}, "
                 f"cap={self._dataset.capacity}, "
                 f"schema={states[0].describe()}, "
-                f"plan=[{chain}])")
+                f"plan=[{chain}]{counters})")

@@ -23,6 +23,7 @@ import numpy as np
 from repro.core.container import ContainerOp, Partition, make_partition
 from repro.core.manifests import PlanTypeError
 from repro.core.schema import Field, Schema, SchemaMismatch
+from repro.obs import span
 
 
 class _IdKey:
@@ -478,9 +479,10 @@ def infer_states(plan: Plan, initial: StageState) -> List[StageState]:
     error from inside the fused ``shard_map`` trace.  Returns
     ``[initial, after_stage_0, ...]``.
     """
-    states = [initial]
-    state = initial
-    for i, stage in enumerate(plan.stages):
-        state = infer_stage(stage, state, i)
-        states.append(state)
-    return states
+    with span("plan.typecheck", stages=len(plan.stages)):
+        states = [initial]
+        state = initial
+        for i, stage in enumerate(plan.stages):
+            state = infer_stage(stage, state, i)
+            states.append(state)
+        return states

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.obs import METRICS, TRACER, timed
 from repro.core.container import Partition, make_partition
 from repro.core.dataset import ShardedDataset
 from repro.core.plan import (KeyedReduceStage, MapStage, Plan, ReduceStage,
@@ -50,13 +51,72 @@ class CompiledProgram:
     fn: Callable[..., Tuple]      # (records, counts) -> outputs
     counters: Tuple[Tuple[int, str], ...]  # trailing counter-vector layout
     key: Hashable                 # cache key it was compiled under
+    #: FLOP/byte estimate of the compiled HLO (launch/hlo_cost), filled
+    #: by :meth:`ensure_compiled` when tracing is enabled.
+    cost: Optional[Dict[str, float]] = None
+    _aot: Optional[Callable[..., Tuple]] = None   # jax.stages.Compiled
+    _aot_failed: bool = False
 
     def __call__(self, records: Any, counts: jax.Array) -> Tuple:
+        if self._aot is not None:
+            try:
+                return self._aot(records, counts)
+            except Exception:
+                # e.g. an argument placed differently than the arrays the
+                # program was AOT-compiled against; programs are pure, so
+                # falling back to the lazy jit path re-runs safely
+                self._aot = None
+                self._aot_failed = True
         return self.fn(records, counts)
 
     @property
     def num_counters(self) -> int:
         return len(self.counters)
+
+    def ensure_compiled(self, records: Any, counts: jax.Array,
+                        phases: Optional[Dict[str, float]] = None) -> None:
+        """AOT trace+compile against concrete arguments, once, so the
+        executor can attribute lowering vs XLA-compile time as separate
+        phases/spans instead of folding both into the first dispatch.
+
+        The compiled executable is reused for every later dispatch (the
+        plan cache keys on shapes/dtypes/mesh, so one signature per
+        program).  Any AOT failure — e.g. an API gap on an old JAX —
+        falls back permanently to the lazy ``jax.jit`` path, whose
+        compile time then lands in the ``dispatch`` phase.
+        """
+        if self._aot is not None or self._aot_failed:
+            return
+        try:
+            with timed("plan.lower", phases):
+                lowered = self.fn.lower(records, counts)
+            with timed("plan.compile", phases) as sp:
+                compiled = lowered.compile()
+                if TRACER.enabled:
+                    # annotate the compile span with what the compiled
+                    # program *does* per dispatch, not just how long the
+                    # compile took
+                    self.cost = _estimate_cost(compiled)
+                    if self.cost:
+                        sp.set(**self.cost)
+        except Exception:
+            self._aot_failed = True
+            return
+        self._aot = compiled
+
+
+def _estimate_cost(compiled) -> Optional[Dict[str, float]]:
+    """FLOP/byte estimate of a compiled program via the trip-count-aware
+    HLO walker (launch/hlo_cost) — annotates compile spans so a trace
+    shows not just how long a compile took but how much work the
+    resulting program does per dispatch."""
+    try:
+        from repro.launch.hlo_cost import analyze
+        a = analyze(compiled.as_text())
+        return {"flops": float(a["flops"]), "bytes": float(a["bytes"]),
+                "wire_bytes": float(a["wire_bytes"])}
+    except Exception:
+        return None
 
 
 class PlanCache:
@@ -92,19 +152,24 @@ class PlanCache:
         self.evictions = 0
 
     def get_or_compile(self, key: Hashable,
-                       build: Callable[[], CompiledProgram]
+                       build: Callable[[], CompiledProgram],
+                       phases: Optional[Dict[str, float]] = None
                        ) -> CompiledProgram:
         prog = self._programs.get(key)
         if prog is not None:
             self.hits += 1
+            METRICS.counter("compile_cache.hits").inc()
             self._programs.move_to_end(key)
             return prog
         self.misses += 1
-        prog = build()
+        METRICS.counter("compile_cache.misses").inc()
+        with timed("plan.build", phases):
+            prog = build()
         self._programs[key] = prog
         while len(self._programs) > self.maxsize:
             self._programs.popitem(last=False)
             self.evictions += 1
+            METRICS.counter("compile_cache.evictions").inc()
         return prog
 
 
@@ -244,8 +309,11 @@ def _plan_uses_pallas(plan: Plan) -> bool:
 
 
 def compile_plan(plan: Plan, ds: ShardedDataset,
-                 cache: Optional[PlanCache] = None) -> CompiledProgram:
-    """Memoized lowering of ``plan`` against ``ds``'s shapes and mesh."""
+                 cache: Optional[PlanCache] = None,
+                 phases: Optional[Dict[str, float]] = None
+                 ) -> CompiledProgram:
+    """Memoized lowering of ``plan`` against ``ds``'s shapes and mesh.
+    ``phases`` (when given) accumulates build time under ``plan.build``."""
     cache = cache if cache is not None else DEFAULT_CACHE
     mesh, axis = ds.mesh, ds.axis
     key = program_key(plan, ds)
@@ -260,7 +328,7 @@ def compile_plan(plan: Plan, ds: ShardedDataset,
             out_specs=out_specs, check_vma=check_vma))
         return CompiledProgram(fn=fn, counters=counters, key=key)
 
-    return cache.get_or_compile(key, build)
+    return cache.get_or_compile(key, build, phases=phases)
 
 
 # NOTE: action execution (dispatch, counter sync, prefix-cache reuse,

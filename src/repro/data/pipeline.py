@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import METRICS, instant
+
 
 # ---------------------------------------------------------------------------
 # Sources (the heterogeneous-storage abstraction)
@@ -137,6 +139,9 @@ class Prefetcher:
                 # wins, and the winning iterator becomes the active one (the
                 # loser is mis-positioned and abandoned).
                 self.stats["respawned"] += 1
+                instant("prefetch.speculative_redispatch", batch=idx,
+                        deadline_s=self.deadline_s)
+                METRICS.counter("prefetch.respawned").inc()
                 backup_it = iter(self.make_iter())
                 try:
                     for _ in range(idx):

@@ -27,6 +27,7 @@ from repro.io.formats import pack_records
 from repro.io.source import DataSource
 from repro.io.splits import InputSplit, assign_splits
 from repro.kernels.common import round_up
+from repro.obs import METRICS, span
 from repro.runtime.lineage import source_root
 
 #: Pack geometry is rounded up to these multiples so consecutive waves of
@@ -62,36 +63,56 @@ def ingest(source: DataSource, mesh: Mesh, axis: str = "data",
         workers = default_workers(source.backend, len(splits))
 
     backend, fmt = source.backend, source.fmt
-    if workers <= 1:
-        # serial fast path: no executor, no future bookkeeping
-        shard_recs: List[List[bytes]] = [
-            [r for sp in b for r in fmt.read_split(backend, sp)]
-            for b in bins]
-    else:
-        with ThreadPoolExecutor(max_workers=workers) as pool:
-            # one future per split, grouped per shard in plan order
-            futs = [[pool.submit(fmt.read_split, backend, sp) for sp in b]
-                    for b in bins]
-            shard_recs = [
-                [r for f in shard for r in f.result()] for shard in futs]
 
-    max_count = max((len(r) for r in shard_recs), default=0)
-    max_width = max((len(rec) for recs in shard_recs for rec in recs),
-                    default=0)
-    cap = capacity if capacity is not None else _round_up(max_count,
-                                                          _CAP_BUCKET)
-    w = width if width is not None else _round_up(max_width, _WIDTH_BUCKET)
-    if max_count > cap:
-        raise ValueError(
-            f"shard record count {max_count} exceeds capacity {cap}; raise "
-            "`capacity` or stream via repro.io.waves")
-    if max_width > w:
-        raise ValueError(f"record length {max_width} exceeds width {w}")
+    def read_one(sp: InputSplit) -> List[bytes]:
+        # fetch + decode of one split (possibly on a pool thread — spans
+        # record their thread, so the trace shows pool parallelism)
+        with span("ingest.fetch", path=sp.path, start=sp.start,
+                  length=sp.length):
+            recs = fmt.read_split(backend, sp)
+        METRICS.counter("ingest.splits").inc()
+        METRICS.counter("ingest.records").inc(len(recs))
+        return recs
 
-    counts = [len(r) for r in shard_recs]
-    packed = (pack_records(recs, capacity=cap, width=w)
-              for recs in shard_recs)  # lazy: packs during device transfer
-    ds = from_shard_arrays(packed, counts, mesh, axis)
+    with span("ingest", splits=len(splits), shards=n, workers=workers):
+        if workers <= 1:
+            # serial fast path: no executor, no future bookkeeping
+            shard_recs: List[List[bytes]] = [
+                [r for sp in b for r in read_one(sp)] for b in bins]
+        else:
+            with ThreadPoolExecutor(max_workers=workers) as pool:
+                # one future per split, grouped per shard in plan order
+                futs = [[pool.submit(read_one, sp) for sp in b]
+                        for b in bins]
+                shard_recs = [
+                    [r for f in shard for r in f.result()]
+                    for shard in futs]
+
+        max_count = max((len(r) for r in shard_recs), default=0)
+        max_width = max((len(rec) for recs in shard_recs for rec in recs),
+                        default=0)
+        cap = capacity if capacity is not None else _round_up(max_count,
+                                                              _CAP_BUCKET)
+        w = width if width is not None else _round_up(max_width,
+                                                      _WIDTH_BUCKET)
+        if max_count > cap:
+            raise ValueError(
+                f"shard record count {max_count} exceeds capacity {cap}; "
+                "raise `capacity` or stream via repro.io.waves")
+        if max_width > w:
+            raise ValueError(f"record length {max_width} exceeds width {w}")
+
+        counts = [len(r) for r in shard_recs]
+
+        def pack_one(recs: List[bytes], shard: int):
+            with span("ingest.pack", shard=shard, records=len(recs)):
+                return pack_records(recs, capacity=cap, width=w)
+
+        # lazy generator: each shard packs during the previous shard's
+        # device transfer (double buffering preserved)
+        packed = (pack_one(recs, i) for i, recs in enumerate(shard_recs))
+        with span("ingest.device_put", shards=n, capacity=cap, width=w):
+            ds = from_shard_arrays(packed, counts, mesh, axis)
     # content-keyed lineage root: re-ingesting the same byte ranges with
     # the same pack geometry reaches materializations persisted earlier
     # (sources assumed immutable while cached — the HDFS/object-store

@@ -38,6 +38,7 @@ from repro.data.pipeline import Prefetcher
 from repro.io.ingest import ingest
 from repro.io.source import DataSource
 from repro.io.splits import InputSplit
+from repro.obs import METRICS, span
 from repro.runtime.executor import DEFAULT_EXECUTOR, Executor
 from repro.runtime.reports import ReportLog
 
@@ -140,10 +141,25 @@ class WaveRunner:
             return m.collect_first_shard_async(label=label)
         return m.collect_async(label=label)
 
-    def _ingest_wave(self, wave: Sequence[InputSplit]):
-        return ingest(self.source, self.mesh, axis=self.axis,
-                      capacity=self.capacity, width=self.width,
-                      workers=self.workers, splits=wave)
+    def _ingest_wave(self, wave: Sequence[InputSplit],
+                     idx: Optional[int] = None):
+        with span("wave.ingest", index=idx, splits=len(wave)):
+            return ingest(self.source, self.mesh, axis=self.axis,
+                          capacity=self.capacity, width=self.width,
+                          workers=self.workers, splits=wave)
+
+    def _await_wave(self, handle, idx: int):
+        """Block for one wave's async action; the wave span links the
+        wave index to the ActionReport the executor recorded for it."""
+        with span("wave", index=idx) as sp:
+            out = handle.result()
+            rep = handle.report
+            if rep is not None:
+                sp.set(action_id=rep.action_id,
+                       action_wall_s=rep.wall_s,
+                       queue_wait_s=rep.queue_wait_s)
+        METRICS.counter("waves.completed").inc()
+        return out
 
     def collect(self) -> Any:
         """Run all waves and return the folded (reduced) or concatenated
@@ -168,20 +184,21 @@ class WaveRunner:
             # bound: at most the computing wave plus the one the
             # prefetcher is ingesting are device-resident.
             pf = Prefetcher(
-                lambda: (self._ingest_wave(w) for w in waves), capacity=1)
+                lambda: (self._ingest_wave(w, i)
+                         for i, w in enumerate(waves)), capacity=1)
             try:
                 pending = None
                 for i in range(len(waves)):
                     if pending is not None:
-                        outputs.append(pending.result())
+                        outputs.append(self._await_wave(pending, i - 1))
                     pending = self._submit_wave(next(pf), i)
-                outputs.append(pending.result())
+                outputs.append(self._await_wave(pending, len(waves) - 1))
             finally:
                 pf.close()
         else:
             for i, w in enumerate(waves):
-                outputs.append(
-                    self._submit_wave(self._ingest_wave(w), i).result())
+                outputs.append(self._await_wave(
+                    self._submit_wave(self._ingest_wave(w, i), i), i))
 
         def snap_stats():
             # taken at every return so the cross-wave fold program (when

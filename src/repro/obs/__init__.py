@@ -1,0 +1,24 @@
+"""Observability: span tracing + process-wide metrics for the runtime.
+
+Two independent, dependency-free primitives (stdlib only — importable
+from any layer without cycles):
+
+* :mod:`repro.obs.trace` — a bounded-ring span recorder with a
+  Chrome-trace/Perfetto JSON exporter.  Disabled by default; the
+  instrumentation threaded through ingest, planner, executor, cache and
+  wave layers costs one branch per call site until
+  :func:`~repro.obs.trace.tracing` (or ``TRACER.start()``) attaches the
+  ring.
+* :mod:`repro.obs.metrics` — always-on counters/gauges/histograms
+  (cache hits per tier, compile-cache hits, exchanged records, queue
+  depth, per-phase walls), snapshotted by ``MaRe.metrics()``.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
+                               MetricsRegistry, METRICS)
+from repro.obs.trace import (TRACER, Tracer, instant, span,  # noqa: F401
+                             timed, tracing)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "METRICS",
+    "TRACER", "Tracer", "instant", "span", "timed", "tracing",
+]

@@ -34,6 +34,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.dataset import ShardedDataset
 from repro.core.plan import Plan
 from repro.core.schema import schema_of_records
+from repro.obs import METRICS, instant, span
 from repro.runtime.lineage import Lineage
 
 TIERS = ("device", "host")
@@ -158,6 +159,7 @@ class MaterializationCache:
             self._entries[ds.lineage] = entry
             self._entries.move_to_end(ds.lineage)
             self.puts += 1
+            METRICS.counter(f"mat_cache.{tier}.puts").inc()
             self._enforce_budgets()
             return entry
 
@@ -179,8 +181,11 @@ class MaterializationCache:
                                if e.tier == "device"), None)
                 if victim is None:
                     break
-                self._to_host(victim, victim.dataset)
+                with span("cache.spill", nbytes=victim.nbytes,
+                          lineage=victim.lineage.digest()):
+                    self._to_host(victim, victim.dataset)
                 self.spills += 1
+                METRICS.counter("mat_cache.device.evictions").inc()
         # host drop, LRU first
         if self.host_budget_bytes is not None:
             while self.tier_bytes("host") > self.host_budget_bytes:
@@ -188,8 +193,12 @@ class MaterializationCache:
                                    if e.tier == "host"), None)
                 if victim_key is None:
                     break
+                instant("cache.drop",
+                        nbytes=self._entries[victim_key].nbytes,
+                        lineage=victim_key.digest())
                 del self._entries[victim_key]
                 self.drops += 1
+                METRICS.counter("mat_cache.host.evictions").inc()
 
     # -- lookup --------------------------------------------------------------
 
@@ -201,17 +210,20 @@ class MaterializationCache:
             entry = self._entries.get(lineage)
             if entry is None:
                 self.misses += 1
+                METRICS.counter("mat_cache.misses").inc()
                 return None
             self._entries.move_to_end(lineage)
             self.hits += 1
+            METRICS.counter(f"mat_cache.{entry.tier}.hits").inc()
             if entry.tier == "device":
                 return entry.dataset
             self.host_hits += 1
-            sharding = NamedSharding(entry.mesh, P(entry.axis))
-            records = jax.tree.map(
-                lambda leaf: jax.device_put(leaf, sharding),
-                entry.host_records)
-            counts = jax.device_put(entry.host_counts, sharding)
+            with span("cache.host_restore", nbytes=entry.nbytes):
+                sharding = NamedSharding(entry.mesh, P(entry.axis))
+                records = jax.tree.map(
+                    lambda leaf: jax.device_put(leaf, sharding),
+                    entry.host_records)
+                counts = jax.device_put(entry.host_counts, sharding)
             return ShardedDataset(records=records, counts=counts,
                                   mesh=entry.mesh, axis=entry.axis,
                                   lineage=lineage)
@@ -245,6 +257,7 @@ class MaterializationCache:
             k, lin = self.longest_prefix(root, plan)
             if not k:
                 self.misses += 1
+                METRICS.counter("mat_cache.misses").inc()
                 return 0, None, None
             tier = self._entries[lin].tier
             return k, tier, self.get(lin)

@@ -39,6 +39,7 @@ import numpy as np
 from repro.core import planner as planner_lib
 from repro.core.dataset import ShardedDataset
 from repro.core.plan import Plan
+from repro.obs import METRICS, span, timed
 from repro.runtime.cache import MaterializationCache
 from repro.runtime.lineage import Lineage, host_root
 from repro.runtime.reports import ActionReport, ReportLog
@@ -63,6 +64,8 @@ def check_counters(counter_vec: jax.Array, specs, num_shards: int,
     """
     per = np.asarray(jax.device_get(counter_vec)).reshape(
         num_shards, len(specs)).sum(axis=0)
+    for (stage_idx, kind), total in zip(specs, per):
+        METRICS.counter(f"counters.{kind}").inc(int(total))
     if diagnostics is not None:
         for (stage_idx, kind), total in zip(specs, per):
             diagnostics[f"stage{stage_idx + stage_offset}.{kind}"] = \
@@ -92,7 +95,8 @@ def execute(ds: ShardedDataset, plan: Plan, *,
             cache: Optional["planner_lib.PlanCache"] = None,
             fuse: bool = True,
             diagnostics: Optional[Dict[str, int]] = None,
-            stage_offset: int = 0) -> ShardedDataset:
+            stage_offset: int = 0,
+            phases: Optional[Dict[str, float]] = None) -> ShardedDataset:
     """Dispatch a plan against a dataset (no lineage/report bookkeeping —
     that is :meth:`Executor.run`; this is the bare engine under it).
 
@@ -101,7 +105,10 @@ def execute(ds: ShardedDataset, plan: Plan, *,
     stage-at-a-time execution (each stage its own program, counters
     synced after each stage) — the pre-planner schedule, kept for
     debugging and benchmarking.  ``diagnostics``, when given, is filled
-    with per-counter totals keyed ``"stage<i>.<kind>"``.
+    with per-counter totals keyed ``"stage<i>.<kind>"``; ``phases``,
+    when given, accumulates the per-phase wall breakdown (lower /
+    compile / dispatch / device_wait / counter_sync) that
+    :class:`~repro.runtime.reports.ActionReport.phases` surfaces.
     """
     if plan.empty:
         return ds
@@ -109,16 +116,28 @@ def execute(ds: ShardedDataset, plan: Plan, *,
         for i, stage in enumerate(plan.stages):
             ds = execute(ds, Plan(stages=(stage,)), cache=cache, fuse=True,
                          diagnostics=diagnostics,
-                         stage_offset=stage_offset + i)
+                         stage_offset=stage_offset + i, phases=phases)
         return ds
-    prog = planner_lib.compile_plan(plan, ds, cache)
-    outs = prog(ds.records, ds.counts)
+    prog = planner_lib.compile_plan(plan, ds, cache, phases=phases)
+    # AOT split: lowering + XLA compile become their own phases/spans
+    # (zero on a plan-cache hit) instead of hiding in the first dispatch
+    prog.ensure_compiled(ds.records, ds.counts, phases)
+    with timed("dispatch", phases, stages=len(plan.stages)):
+        outs = prog(ds.records, ds.counts)
     if prog.num_counters:
         out_records, out_counts, counter_vec = outs
-        check_counters(counter_vec, prog.counters, ds.num_shards,
-                       diagnostics, stage_offset)
     else:
         out_records, out_counts = outs
+    # the dispatch above returns asynchronously-executing arrays; waiting
+    # here attributes device time to the action that spent it rather
+    # than to whoever touches the values first (collect, counter sync)
+    with timed("device_wait", phases):
+        jax.block_until_ready((out_records, out_counts))
+    if prog.num_counters:
+        with timed("counter_sync", phases,
+                   num_counters=prog.num_counters):
+            check_counters(counter_vec, prog.counters, ds.num_shards,
+                           diagnostics, stage_offset)
     return ShardedDataset(records=out_records, counts=out_counts,
                           mesh=ds.mesh, axis=ds.axis)
 
@@ -129,14 +148,29 @@ class ActionHandle:
     def __init__(self, label: Optional[str] = None) -> None:
         self.label = label
         self.report: Optional[ActionReport] = None
+        #: Set by Executor.submit / the dispatch worker: when the action
+        #: entered the queue and when the worker dequeued it.
+        self.submitted_at: Optional[float] = None
+        self.started_at: Optional[float] = None
         self._done = threading.Event()
         self._value: Any = None
         self._error: Optional[BaseException] = None
+
+    @property
+    def queue_wait_s(self) -> float:
+        """Seconds spent queued behind earlier actions (0.0 until the
+        dispatch worker picks this action up)."""
+        if self.submitted_at is None or self.started_at is None:
+            return 0.0
+        return max(0.0, self.started_at - self.submitted_at)
 
     def done(self) -> bool:
         return self._done.is_set()
 
     def result(self, timeout: Optional[float] = None) -> Any:
+        """Block for the action's value.  A ``TimeoutError`` does NOT
+        poison the handle: a later ``result()`` call still succeeds once
+        the action completes."""
         if not self._done.wait(timeout):
             raise TimeoutError(f"action {self.label or ''} still pending")
         if self._error is not None:
@@ -204,29 +238,36 @@ class Executor:
             fuse: bool = True,
             plan_cache: Optional["planner_lib.PlanCache"] = None,
             reports: Optional[ReportLog] = None,
-            label: Optional[str] = None
+            label: Optional[str] = None,
+            queue_wait_s: float = 0.0
             ) -> Tuple[ShardedDataset, ActionReport]:
         """Run one action: prefix lookup, suffix dispatch, counter check,
         report.  Returns the materialized dataset (lineage = root +
-        whole plan) and the action's report."""
+        whole plan) and the action's report.  ``queue_wait_s`` is the
+        async path's measured time-on-queue, recorded on the report
+        (execution wall time starts here, not at submit)."""
         cache = plan_cache if plan_cache is not None else self.plan_cache
         cache = cache if cache is not None else planner_lib.DEFAULT_CACHE
-        with self._run_lock:
+        with self._run_lock, span("action", plan=plan.describe(),
+                                  label=label) as action_span:
             t0 = time.monotonic()
             before = cache.stats()
             root = self.ensure_lineage(ds)
             result_lineage = root.extend(plan)
             counters: Dict[str, int] = {}
+            phases: Dict[str, float] = {}
             cached_stages, cache_tier = 0, None
             if not plan.empty:
-                k, tier, cached = self.mat_cache.lookup_prefix(root, plan)
+                with timed("cache_lookup", phases):
+                    k, tier, cached = self.mat_cache.lookup_prefix(root,
+                                                                   plan)
                 if cached is not None:
                     ds = cached
                     cached_stages = k
                     cache_tier = tier
                 ds = execute(ds, plan.drop(cached_stages), cache=cache,
                              fuse=fuse, diagnostics=counters,
-                             stage_offset=cached_stages)
+                             stage_offset=cached_stages, phases=phases)
                 ds.lineage = result_lineage
             after = cache.stats()
             report = ActionReport(
@@ -240,7 +281,16 @@ class Executor:
                 programs_compiled=after["misses"] - before["misses"],
                 program_cache_hits=after["hits"] - before["hits"],
                 wall_s=time.monotonic() - t0,
+                phases=phases,
+                queue_wait_s=queue_wait_s,
                 label=label)
+            action_span.set(action_id=report.action_id,
+                            cached_stages=cached_stages)
+            METRICS.counter("executor.actions").inc()
+            for phase, s in phases.items():
+                METRICS.histogram(f"phase.{phase}").observe(s)
+            if queue_wait_s:
+                METRICS.histogram("phase.queue_wait").observe(queue_wait_s)
             self.reports.append(report)
             if reports is not None:
                 reports.append(report)
@@ -265,6 +315,8 @@ class Executor:
     def _drain(self) -> None:
         while True:
             handle, fn = self._queue.get()
+            METRICS.gauge("executor.queue_depth").set(self._queue.qsize())
+            handle.started_at = time.monotonic()
             try:
                 handle._finish(value=fn(handle))
             except BaseException as e:          # delivered via result()
@@ -278,7 +330,10 @@ class Executor:
         blocks when ``max_pending`` actions are already queued)."""
         self._ensure_worker()
         handle = ActionHandle(label=label)
+        handle.submitted_at = time.monotonic()
         self._queue.put((handle, fn))
+        METRICS.gauge("executor.queue_depth").set(self._queue.qsize())
+        METRICS.counter("executor.submitted").inc()
         return handle
 
     def submit_action(self, ds: ShardedDataset, plan: Plan, *,
@@ -291,12 +346,16 @@ class Executor:
         """Async :meth:`run`: dispatch the plan on the executor thread and
         (optionally) post-process the materialized dataset with
         ``finalize`` (e.g. ``dataset.collect``); the handle resolves to
-        ``finalize(ds)`` (or the dataset itself)."""
+        ``finalize(ds)`` (or the dataset itself).  Queue wait (submit ->
+        worker dequeue) is measured separately from execution and lands
+        in ``report.queue_wait_s`` — a backed-up queue no longer makes
+        an action's ``wall_s`` look idle-fast."""
 
         def action(handle: ActionHandle) -> Any:
             out, report = self.run(ds, plan, fuse=fuse,
                                    plan_cache=plan_cache, reports=reports,
-                                   label=label)
+                                   label=label,
+                                   queue_wait_s=handle.queue_wait_s)
             handle.report = report
             return finalize(out) if finalize is not None else out
 

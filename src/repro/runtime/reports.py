@@ -29,6 +29,15 @@ class ActionReport:
     programs_compiled: int = 0      # compile-cache misses this action
     program_cache_hits: int = 0
     wall_s: float = 0.0
+    #: Per-phase wall breakdown (seconds): cache_lookup, plan.lower,
+    #: plan.compile, dispatch, device_wait, counter_sync — the phases
+    #: sum to ~wall_s (everything outside them is report bookkeeping).
+    phases: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: Async path only: seconds spent queued behind earlier actions
+    #: BEFORE the dispatch worker started this one (NOT part of wall_s,
+    #: which times execution only — a backed-up queue no longer makes a
+    #: slow action look fast).
+    queue_wait_s: float = 0.0
     label: Optional[str] = None     # e.g. "wave 3" on the wave path
 
     @property
@@ -39,9 +48,11 @@ class ActionReport:
         hit = (f", cached_prefix={self.cached_stages}/{self.total_stages}"
                f" ({self.cache_tier})" if self.cached_stages else "")
         tag = f" [{self.label}]" if self.label else ""
+        qw = (f", queue_wait={self.queue_wait_s * 1e3:.1f}ms"
+              if self.queue_wait_s else "")
         return (f"action#{self.action_id}{tag}: {self.plan}{hit}, "
                 f"compiled={self.programs_compiled}, "
-                f"wall={self.wall_s * 1e3:.1f}ms")
+                f"wall={self.wall_s * 1e3:.1f}ms{qw}")
 
 
 class ReportLog:
@@ -85,3 +96,41 @@ class ReportLog:
                 if key == counter or key.endswith("." + counter):
                     acc += v
         return acc
+
+    def phase_totals(self) -> Dict[str, float]:
+        """Summed per-phase seconds across all retained reports."""
+        acc: Dict[str, float] = {}
+        for r in self._reports:
+            for phase, s in r.phases.items():
+                acc[phase] = acc.get(phase, 0.0) + s
+        return acc
+
+    def summary(self) -> str:
+        """Session-level aggregate: action/compile/cache totals plus a
+        phase-breakdown table over the retained history (the interactive
+        "where did my time go" view)."""
+        reports = list(self._reports)
+        if not reports:
+            return "ReportLog: no actions recorded"
+        wall = sum(r.wall_s for r in reports)
+        queued = sum(r.queue_wait_s for r in reports)
+        compiled = sum(r.programs_compiled for r in reports)
+        cached = sum(r.cached_stages for r in reports)
+        stages = sum(r.total_stages for r in reports)
+        lines = [
+            f"ReportLog: {len(reports)} retained / {self.appended} total "
+            f"actions, wall={wall:.3f}s"
+            + (f", queue_wait={queued:.3f}s" if queued else ""),
+            f"  stages: {stages} planned, {cached} served from cache; "
+            f"programs compiled: {compiled}",
+        ]
+        totals = self.phase_totals()
+        if totals:
+            lines.append(f"  {'phase':<16} {'total':>10} {'mean':>10} "
+                         f"{'share':>7}")
+            for phase, s in sorted(totals.items(), key=lambda kv: -kv[1]):
+                lines.append(
+                    f"  {phase:<16} {s:>9.3f}s "
+                    f"{s / len(reports) * 1e3:>8.2f}ms "
+                    f"{s / wall * 100 if wall else 0:>6.1f}%")
+        return "\n".join(lines)

@@ -1,5 +1,8 @@
 """Runtime layer: lineage-keyed materialization cache (prefix reuse,
 budgeted LRU tiers), async action engine, per-action report history."""
+import threading
+import time
+
 import jax
 import numpy as np
 import pytest
@@ -10,6 +13,7 @@ from repro.core.container import ContainerOp
 from repro.io import text_source
 from repro.runtime import (Executor, MaterializationCache, estimate_nbytes,
                            host_root)
+from repro.runtime.reports import ActionReport, ReportLog
 
 
 def _executor(**cache_kw) -> Executor:
@@ -239,6 +243,68 @@ def test_async_action_delivers_exceptions():
         h.result(timeout=60)
 
 
+def test_async_result_timeout_does_not_poison_handle():
+    ex = _executor()
+    release = threading.Event()
+    h = ex.submit(lambda handle: (release.wait(30), "ok")[1], label="slow")
+    with pytest.raises(TimeoutError):
+        h.result(timeout=0.05)
+    assert not h.done()
+    release.set()
+    assert h.result(timeout=30) == "ok"     # later call still succeeds
+    assert h.done()
+
+
+def test_queue_wait_measured_separately_from_execution():
+    ex = _executor()
+    gate = threading.Event()
+    ex.submit(lambda handle: gate.wait(30))     # hog the dispatch thread
+    op, _ = _counting_op("rt/qw")
+    m = MaRe(_data(), plan_cache=PlanCache(), executor=ex).map(op=op)
+    t_submit = time.monotonic()
+    h = m.collect_async(label="queued")
+    time.sleep(0.25)
+    gate.set()
+    h.result(timeout=60)
+    elapsed = time.monotonic() - t_submit
+    assert h.queue_wait_s >= 0.2
+    rep = h.report
+    assert rep.queue_wait_s == h.queue_wait_s
+    assert f"queue_wait={rep.queue_wait_s * 1e3:.1f}ms" in rep.describe()
+    # wait and execution are disjoint sub-intervals of submit->result:
+    # wall_s starts at dequeue, the wait is not folded into it
+    assert rep.queue_wait_s + rep.wall_s <= elapsed + 0.05
+
+
+def test_reportlog_overflow_bounds_history_but_counts_monotonically():
+    log = ReportLog(maxlen=4)
+    for _ in range(10):
+        log.append(ActionReport(action_id=log.new_id(), plan="p",
+                                total_stages=1))
+    assert len(log) == 4                    # history bounded at maxlen
+    assert log.appended == 10               # lifetime count keeps going
+    assert [r.action_id for r in log] == [6, 7, 8, 9]
+    assert log.new_id() == 10               # ids never reused
+    assert log.latest.action_id == 9
+
+
+def test_reportlog_summary_renders_phase_table():
+    log = ReportLog()
+    assert log.summary() == "ReportLog: no actions recorded"
+    log.append(ActionReport(action_id=0, plan="p", total_stages=2,
+                            cached_stages=1, programs_compiled=1,
+                            wall_s=0.2, queue_wait_s=0.1,
+                            phases={"dispatch": 0.15,
+                                    "counter_sync": 0.05}))
+    s = log.summary()
+    assert "1 retained / 1 total actions" in s
+    assert "queue_wait=0.100s" in s
+    assert "2 planned, 1 served from cache" in s
+    assert "programs compiled: 1" in s
+    assert "dispatch" in s and "75.0%" in s     # 0.15 / 0.2 wall
+    assert log.phase_totals() == {"dispatch": 0.15, "counter_sync": 0.05}
+
+
 def test_async_is_snapshot_not_mutation():
     op, _ = _counting_op()
     ex = _executor()
@@ -295,6 +361,17 @@ def test_report_counters_keep_absolute_stage_indices_after_prefix_hit():
     assert q.reports.total("exchanged_records") > 0
 
 
+def test_describe_lists_keyed_reduce_counter_specs():
+    m = MaRe((np.array([0, 1] * 16, np.int32), np.ones(32, np.float32)),
+             plan_cache=PlanCache(), executor=_executor()
+             ).reduce_by_key(_key_first, value_by=_val_second, op="sum",
+                             num_keys=2)
+    d = m.describe()
+    assert "counters=[" in d
+    assert "stage0.key_overflow" in d
+    assert "stage0.exchanged_records" in d
+
+
 # -- golden describe ----------------------------------------------------------
 
 def test_describe_annotates_cached_lineage_nodes_golden():
@@ -310,7 +387,7 @@ def test_describe_annotates_cached_lineage_nodes_golden():
     assert q.describe() == (
         "MaRe(shards=1, cap=8, schema=(i32)#8, "
         "plan=[map[rt/id:latest] : ?#? [cached] -> "
-        "shuffle(cap=None) : ?#?])")
+        "shuffle(cap=None) : ?#?], counters=[stage1.shuffle_dropped])")
     # the persisted node is marked; the suffix is not
     fresh = MaRe(from_host((np.arange(8, dtype=np.int32),), mesh),
                  plan_cache=cache, executor=ex).map(op=op)
