@@ -90,6 +90,39 @@ def print_phase_table(results) -> None:
         print(f"| {bench} | {mode} | {phase} | {_fmt(s)} |")
 
 
+def tuning_rows(name: str, result: dict):
+    """Segment-reduce autotuner audit rows: one per tuned shape, from the
+    ``autotune`` list kmer.py embeds (see ``tune_report()``).  Candidate
+    timings are inlined as ``name=ms`` pairs so a mis-pick is visible at
+    a glance; block/key_block are only meaningful for the tiled kernel."""
+    for entry in result.get("autotune", []):
+        cands = ", ".join(f"{c['candidate']}={c['ms']:.2f}ms"
+                          for c in entry.get("candidates", []))
+        blocks = (f"{entry['block']}x{entry['key_block']}"
+                  if entry.get("chosen") == "tiled" else "-")
+        yield (name, entry["backend"],
+               f"n={entry['n']}, keys={entry['num_keys']}",
+               entry["chosen"], blocks, cands or "-")
+
+
+def print_tuning_table(results) -> None:
+    rows = [row for name, result in results
+            for row in tuning_rows(name, result)]
+    if not rows:
+        return
+    print("\n### Segment-reduce autotuner\n")
+    print("| bench | backend | shape | chosen | blocks | candidates |")
+    print("| --- | --- | --- | --- | --- | --- |")
+    for bench, backend, shape, chosen, blocks, cands in rows:
+        print(f"| {bench} | {backend} | {shape} "
+              f"| {chosen} | {blocks} | {cands} |")
+    for name, result in results:
+        ratio = result.get("kernel_vs_fallback_warm")
+        if ratio is not None:
+            print(f"\n{name}: tuned default vs scatter fallback, warm: "
+                  f"**{_fmt(ratio)}x** (guard: >= 1.0 at full scale)")
+
+
 def main() -> int:
     bench_dir = sys.argv[1] if len(sys.argv) > 1 else "."
     paths = sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json")))
@@ -109,6 +142,7 @@ def main() -> int:
         for key, value in rows_for(result):
             print(f"| {key} | {value} |")
     print_cache_table(results)
+    print_tuning_table(results)
     print_phase_table(results)
     return 0
 

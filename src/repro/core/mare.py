@@ -259,7 +259,8 @@ class MaRe:
                       command: str = "",
                       combiner: bool = True,
                       capacity: Optional[int] = None,
-                      use_kernel: Optional[bool] = None) -> "MaRe":
+                      use_kernel: Optional[bool] = None,
+                      salt: int = 1) -> "MaRe":
         """Grouped aggregation: fold records with equal keys (lazy).
 
         ``key_by(records) -> int array [capacity]`` computes a key per
@@ -284,15 +285,35 @@ class MaRe:
         per-destination send capacity is the statically-known largest hash
         bucket.  The result partition on each shard holds the keys hashing
         to it as records ``(key, folded_values, record_count)``, compacted
-        to the front.  The segment-reduce hot path runs the Pallas kernel
-        when available (``use_kernel`` / ``REPRO_SEGMENT_KERNEL``
-        override the backend default).
+        to the front.  The segment-reduce hot path autotunes between the
+        tiled Pallas kernel and the fused/sorted/scatter jnp strategies
+        per shape (``use_kernel=True/False`` forces the kernel/the plain
+        scatter; ``REPRO_SEGMENT_KERNEL`` overrides the default; see
+        docs/kernels.md).
+
+        Skew: with ``combiner=False`` a hot key inflates every shard's
+        statically-sized exchange buffer.  ``salt=S`` (S > 1) spreads
+        each key's records over S consecutive shards and re-exchanges
+        per-key partials in a second hop, shrinking buffers by ~S/2 on
+        hot-key data (docs/architecture.md §keyed exchange).  After any
+        action, ``last_diagnostics['stage<i>.max_send_count']`` is the
+        tightest lossless ``capacity=`` observed — the feedback knob if
+        the salted heuristic capacity ever overflows.  ``salt`` with
+        ``combiner=True`` is rejected: the combiner already bounds the
+        exchange by distinct keys, so salting could only add a hop.
         """
         if image is not None:
             op = _resolve_monoid(image, command, self.registry)
         if op not in KEYED_MONOIDS:
             raise ValueError(f"unknown reduce_by_key op {op!r}; expected "
                              f"one of {KEYED_MONOIDS}")
+        if salt < 1:
+            raise ValueError(f"salt must be >= 1, got {salt}")
+        if salt > 1 and combiner:
+            raise ValueError(
+                "salt > 1 requires combiner=False: the map-side combiner "
+                "already caps the exchange at one record per distinct key, "
+                "so hot-key splitting has nothing to spread")
         if num_keys is None:
             num_keys = self._stage_states()[-1].key_space
             if num_keys is None:
@@ -303,7 +324,8 @@ class MaRe:
             raise ValueError(f"num_keys must be >= 1, got {num_keys}")
         return self._chain(self.plan.then_keyed_reduce(
             key_by, op=op, num_keys=num_keys, value_by=value_by,
-            combiner=combiner, capacity=capacity, use_kernel=use_kernel))
+            combiner=combiner, capacity=capacity, use_kernel=use_kernel,
+            salt=salt))
 
     # Paper spelling aliases
     repartitionBy = repartition_by

@@ -149,7 +149,11 @@ class KeyedReduceStage:
     ``value_by`` selects the value pytree to fold (default: the whole
     record).  With ``combiner=True`` each shard pre-aggregates its records
     per key *before* the exchange (the classic map-side combiner), so
-    shuffle volume scales with distinct keys, not records.
+    shuffle volume scales with distinct keys, not records.  With
+    ``combiner=False``, ``salt > 1`` splits hot keys over ``salt``
+    destination shards (round-robin by record slot) and re-exchanges the
+    per-key partials in a second, combiner-style hop — the skew defense
+    when one key dominates the raw record stream.
     """
 
     key_by: Callable[[Any], jax.Array]
@@ -159,16 +163,19 @@ class KeyedReduceStage:
     combiner: bool = True
     capacity: Optional[int] = None
     use_kernel: Optional[bool] = None
+    salt: int = 1
 
     def signature(self) -> Tuple:
         # key_by/value_by key on callable identity, like ShuffleStage.key_by
         return ("keyed_reduce", self.key_by, self.value_by, self.op,
-                self.num_keys, self.combiner, self.capacity, self.use_kernel)
+                self.num_keys, self.combiner, self.capacity, self.use_kernel,
+                self.salt)
 
     def describe(self) -> str:
         comb = "on" if self.combiner else "off"
+        extra = f", salt={self.salt}" if self.salt > 1 else ""
         return (f"reduce_by_key[{self.op}, keys={self.num_keys}, "
-                f"combiner={comb}]")
+                f"combiner={comb}{extra}]")
 
 
 Stage = Union[MapStage, ShuffleStage, ReduceStage, KeyedReduceStage]
@@ -181,11 +188,19 @@ COUNTER_ERROR_KINDS = frozenset({"shuffle_dropped", "key_overflow"})
 
 def stage_counter_kinds(stage: Stage) -> Tuple[str, ...]:
     """Diagnostic counters a stage contributes to the fused program's
-    output vector (one int32 scalar per shard per kind, in this order)."""
+    output vector (one int32 scalar per shard per kind, in this order).
+
+    ``max_send_count`` is max-reduced across shards (not summed, unlike
+    the rest): it is the tightest per-destination ``capacity=`` that would
+    have been lossless for this run — the runtime capacity-feedback knob.
+    ``exchange_buffer_rows`` is the *static* per-shard exchange buffer
+    allocation (rows) so skewed-vs-salted buffer volume is observable.
+    """
     if isinstance(stage, ShuffleStage):
         return ("shuffle_dropped",)
     if isinstance(stage, KeyedReduceStage):
-        return ("key_overflow", "shuffle_dropped", "exchanged_records")
+        return ("key_overflow", "shuffle_dropped", "exchanged_records",
+                "max_send_count", "exchange_buffer_rows")
     return ()
 
 
@@ -216,10 +231,12 @@ class Plan:
                           value_by: Optional[Callable[[Any], Any]] = None,
                           combiner: bool = True,
                           capacity: Optional[int] = None,
-                          use_kernel: Optional[bool] = None) -> "Plan":
+                          use_kernel: Optional[bool] = None,
+                          salt: int = 1) -> "Plan":
         return Plan(stages=self.stages + (KeyedReduceStage(
             key_by=key_by, op=op, num_keys=num_keys, value_by=value_by,
-            combiner=combiner, capacity=capacity, use_kernel=use_kernel),))
+            combiner=combiner, capacity=capacity, use_kernel=use_kernel,
+            salt=salt),))
 
     def drop(self, n: int) -> "Plan":
         """Plan with the first ``n`` stages removed (the suffix left to

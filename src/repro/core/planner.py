@@ -38,7 +38,8 @@ from repro.core.container import Partition, make_partition
 from repro.core.dataset import ShardedDataset
 from repro.core.plan import (KeyedReduceStage, MapStage, Plan, ReduceStage,
                              ShuffleStage, _apply_chain)
-from repro.core.shuffle import keyed_bucket_capacity, shuffle_partition
+from repro.core.shuffle import (keyed_bucket_capacity, salted_dest,
+                                shuffle_partition)
 from repro.core.tree_reduce import (keyed_combine_partition,
                                     keyed_merge_partition,
                                     tree_reduce_partition)
@@ -197,12 +198,33 @@ def _apply_keyed(stage: KeyedReduceStage, part: Partition, axis: str,
     statically known largest hash bucket (exact-lossless).  Combiner off
     ships raw ``(key, value, 1)`` records with the input capacity — the
     shuffle-volume baseline benchmarks compare against.
+
+    Skew (``combiner=False, salt > 1``): a hot key makes the single-hop
+    exchange degenerate — static SPMD forces ONE capacity for every
+    (source, dest) pair, and a 90%-hot key forces it towards the full
+    input capacity.  The salted path exchanges twice: hop 1 spreads each
+    key's records over ``salt`` consecutive shards (``salted_dest``) at
+    capacity ``~2 * cap_in / spread`` where ``spread = min(salt,
+    axis_size)`` (a key cannot land on more destinations than exist),
+    every shard merges what it received into per-key partials, and hop 2
+    re-exchanges those partials combiner-style at the exact-lossless
+    bucket capacity.  Buffer volume drops from ``axis_size * cap_in`` to
+    ``axis_size * (2 * cap_in / spread + bucket_cap)`` rows per shard.  Hop 1's capacity is heuristic (2x
+    headroom over the perfectly-spread hot key); adversarial key mixes
+    can still overflow, which raises at action time with the
+    ``max_send_count`` diagnostic as the tight retry capacity.
+
+    Counters (order = ``stage_counter_kinds``): key_overflow,
+    shuffle_dropped, exchanged_records, max_send_count (max per-dest send
+    this shard; max-reduced across shards by the executor),
+    exchange_buffer_rows (static per-shard buffer allocation).
     """
     keys = jnp.asarray(stage.key_by(part.records)).astype(jnp.int32)
     values = (stage.value_by(part.records) if stage.value_by is not None
               else part.records)
     valid = part.mask()
     num_keys = stage.num_keys
+    salt = 1 if stage.combiner else max(1, int(stage.salt))
     if stage.combiner:
         send, overflow = keyed_combine_partition(
             keys, values, valid, num_keys, op=stage.op,
@@ -219,15 +241,46 @@ def _apply_keyed(stage: KeyedReduceStage, part: Partition, axis: str,
                                                 mode="clip"), values),
                 jnp.take(ok.astype(jnp.int32), order, mode="clip"))
         send = make_partition(recs, jnp.sum(ok).astype(jnp.int32))
-        default_cap = part.capacity    # any shard may ship every record
+        if salt > 1:
+            # perfectly-spread hot key needs cap_in/spread; 2x headroom
+            # for overlapping salt windows of distinct keys. A key can
+            # never spread over more destinations than exist, so the
+            # spread factor is capped at axis_size (salt > axis_size on
+            # a small mesh must not shrink the buffer below what one
+            # destination can receive).
+            spread = min(salt, axis_size)
+            default_cap = min(part.capacity,
+                              2 * ((part.capacity + spread - 1) // spread))
+        else:
+            default_cap = part.capacity  # any shard may ship every record
     cap = stage.capacity or default_cap
+    dest = (salted_dest(send.records[0], axis_size, salt)
+            if salt > 1 else None)
     res = shuffle_partition(send, send.records[0], axis_name=axis,
-                            axis_size=axis_size, capacity=cap)
+                            axis_size=axis_size, capacity=cap, dest=dest)
     exchanged = jnp.sum(res.send_counts).astype(jnp.int32)
+    max_send = jnp.max(res.send_counts).astype(jnp.int32)
+    buffer_rows = axis_size * cap
     out, merge_overflow = keyed_merge_partition(
         res.part, num_keys, op=stage.op, use_kernel=stage.use_kernel)
+    dropped = res.dropped
+    if salt > 1:
+        # hop 2: per-key partials back to their hash owner (combiner-style,
+        # exact-lossless capacity) + final merge
+        cap2 = keyed_bucket_capacity(num_keys, axis_size)
+        res2 = shuffle_partition(out, out.records[0], axis_name=axis,
+                                 axis_size=axis_size, capacity=cap2)
+        exchanged = exchanged + jnp.sum(res2.send_counts).astype(jnp.int32)
+        max_send = jnp.maximum(max_send,
+                               jnp.max(res2.send_counts).astype(jnp.int32))
+        buffer_rows += axis_size * cap2
+        dropped = dropped + res2.dropped
+        out, merge2_overflow = keyed_merge_partition(
+            res2.part, num_keys, op=stage.op, use_kernel=stage.use_kernel)
+        merge_overflow = merge_overflow + merge2_overflow
     return out, [(overflow + merge_overflow).astype(jnp.int32),
-                 res.dropped.astype(jnp.int32), exchanged]
+                 dropped.astype(jnp.int32), exchanged, max_send,
+                 jnp.full((), buffer_rows, jnp.int32)]
 
 
 def _validate_mount(mount, records, stage_idx: int, op_name: str,
@@ -299,12 +352,21 @@ def lower(plan: Plan, axis: str, axis_size: int):
 
 
 def _plan_uses_pallas(plan: Plan) -> bool:
-    """Whether any keyed stage resolves to the Pallas segment-reduce kernel
-    (shard_map has no replication rule for pallas_call, so the program must
-    be built with the replication check off)."""
+    """Whether any keyed stage COULD resolve to the Pallas segment-reduce
+    kernel (shard_map has no replication rule for pallas_call, so such a
+    program must be built with the replication check off).  Conservative:
+    with ``use_kernel=None`` the autotuner decides at trace time, so this
+    answers "is tiled in the candidate set" (TPU backend, env force, or
+    ``REPRO_SEGMENT_TUNE_PALLAS=1``), not "will tiled win"."""
+    import os
+
     from repro.kernels.segment_reduce.ops import resolve_use_kernel
+    tuner_may_pick = (jax.default_backend() == "tpu"
+                      or os.environ.get("REPRO_SEGMENT_TUNE_PALLAS") == "1")
     return any(isinstance(st, KeyedReduceStage)
-               and resolve_use_kernel(st.use_kernel, st.op)
+               and (resolve_use_kernel(st.use_kernel, st.op)
+                    or (st.use_kernel is None and st.op == "sum"
+                        and tuner_may_pick))
                for st in plan.stages)
 
 

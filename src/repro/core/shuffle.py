@@ -33,16 +33,18 @@ def hash_keys(keys: jax.Array) -> jax.Array:
     return x
 
 
-def keyed_bucket_capacity(num_keys: int, axis_size: int) -> int:
-    """Exact-lossless per-destination send capacity for a *combined* keyed
-    exchange: the hash partitioner is deterministic and the key space is
-    bounded, so the largest destination bucket over ``range(num_keys)`` is
-    computable statically on the host.  A combiner-side shard sends at most
-    one record per distinct key, hence at most this many to any shard —
-    typically ~``num_keys / axis_size`` instead of the worst-case
-    ``num_keys`` a dynamic bound would have to assume.  Runs chunked so a
-    4**15-sized key space costs MiBs of host scratch, not GiBs.  (Host-side
-    mirror of :func:`hash_keys`; keep the two in lockstep.)"""
+def keyed_bucket_capacities(num_keys: int, axis_size: int) -> np.ndarray:
+    """Exact per-destination bucket sizes of the keyed hash exchange.
+
+    The hash partitioner is deterministic and the key space is bounded, so
+    how many of the ``num_keys`` possible keys each destination shard owns
+    is computable statically on the host: entry ``d`` is
+    ``|{k in [0, num_keys) : hash(k) % axis_size == d}|``.  A combiner-side
+    shard sends at most one record per distinct key, so entry ``d`` bounds
+    what *any* shard can send to ``d`` — the skew-aware capacity vector.
+    Runs chunked so a 4**15-sized key space costs MiBs of host scratch,
+    not GiBs.  (Host-side mirror of :func:`hash_keys`; keep in lockstep.)
+    """
     mask = np.uint64(0xFFFFFFFF)
     buckets = np.zeros((axis_size,), np.int64)
     chunk = 1 << 22
@@ -53,7 +55,46 @@ def keyed_bucket_capacity(num_keys: int, axis_size: int) -> int:
         x = x ^ (x >> np.uint64(16))
         dest = (x % np.uint64(axis_size)).astype(np.int64)
         buckets += np.bincount(dest, minlength=axis_size)
-    return max(1, int(buckets.max()))
+    return buckets
+
+
+def keyed_bucket_capacity(num_keys: int, axis_size: int) -> int:
+    """Exact-lossless *uniform* per-destination send capacity for a
+    combined keyed exchange: ``max(keyed_bucket_capacities(...))``.
+
+    Contract: a single ``lax.all_to_all`` under static SPMD must use ONE
+    capacity for every (source, destination) pair — shapes are uniform
+    across shards — so the exchange buffer is sized to the *largest* hash
+    bucket even though most destinations own fewer keys.  Typically
+    ~``num_keys / axis_size`` instead of the worst-case ``num_keys`` a
+    dynamic bound would have to assume; the gap between this max and the
+    mean of :func:`keyed_bucket_capacities` is the (mild) hash-imbalance
+    cost, and is unrelated to *data* skew — a hot key inflates record
+    counts, not distinct-key counts, which is why the combiner (or the
+    salted two-hop path for ``combiner=False``; see
+    ``planner._apply_keyed``) is the skew defense, not this bound.
+    Overflow semantics: sends beyond capacity are counted into
+    ``ShuffleResult.dropped`` and raise at action time; with this bound
+    on a combined exchange the counter is provably always zero.
+    """
+    return max(1, int(keyed_bucket_capacities(num_keys, axis_size).max()))
+
+
+def salted_dest(keys: jax.Array, axis_size: int, salt: int) -> jax.Array:
+    """Hot-key-splitting destination map: spread each key's records over
+    ``salt`` consecutive shards round-robin by record slot.
+
+    ``dest = (hash(key) + (slot % salt)) % axis_size`` — a key's records
+    land on a deterministic window of ``salt`` shards instead of one, so
+    a 90%-hot key costs any single destination ~``n*0.9/salt`` slots
+    rather than ``n*0.9``.  Equal keys no longer co-locate after ONE
+    exchange; callers must follow with a per-key merge and a second,
+    combiner-style exchange (the two-hop path in ``planner._apply_keyed``).
+    """
+    base = hash_keys(keys)
+    slot = jnp.arange(keys.shape[0], dtype=jnp.uint32)
+    return ((base + slot % jnp.uint32(salt))
+            % jnp.uint32(axis_size)).astype(jnp.int32)
 
 
 class ShuffleResult(NamedTuple):
@@ -139,6 +180,7 @@ def shuffle_partition(
     axis_size: int,
     capacity: Optional[int] = None,
     partitioner: Callable[[jax.Array], jax.Array] = hash_keys,
+    dest: Optional[jax.Array] = None,
 ) -> ShuffleResult:
     """shard_map-interior repartitionBy over ``axis_name``.
 
@@ -146,11 +188,15 @@ def shuffle_partition(
     ignored).  Output partition capacity is ``axis_size * capacity`` (every
     source may contribute up to ``capacity`` records).  With ``capacity ==
     part.capacity`` the shuffle is lossless (a single source can never
-    overflow a destination).
+    overflow a destination).  ``dest`` (int32 [capacity_in], values in
+    ``[0, axis_size)``) overrides the ``partitioner(keys) % axis_size``
+    destination map entirely — the hook the salted skew path uses to
+    spread a hot key over several shards (:func:`salted_dest`).
     """
     cap_in = part.capacity
     capacity = capacity or cap_in
-    dest = (partitioner(keys) % jnp.uint32(axis_size)).astype(jnp.int32)
+    if dest is None:
+        dest = (partitioner(keys) % jnp.uint32(axis_size)).astype(jnp.int32)
     valid = part.mask()
     pack = _pack_by_dest(part.records, dest, valid, axis_size, capacity)
     buf, send_counts, dropped = pack.buffer, pack.counts, pack.dropped

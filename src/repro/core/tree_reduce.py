@@ -236,10 +236,20 @@ def keyed_merge_partition(part: Partition, num_keys: int,
     """Post-shuffle merge: fold received ``(keys, values, counts)`` partial
     aggregates into final per-key records on the owning shard.  Per-key
     record counts always merge with ``sum`` (they count source records, not
-    values).  Returns ``(partition, overflow)``."""
+    values).  For the sum monoid the counts ride the same segment-reduce
+    call as the values (one fused scatter / kernel launch instead of two);
+    max/min need a second sum-reduce for the counts.  Returns
+    ``(partition, overflow)``."""
     from repro.kernels.segment_reduce.ops import segment_reduce
     rkeys, rvalues, rcounts = part.records
     mask = part.mask()
+    if op == "sum":
+        leaves, treedef = jax.tree.flatten(rvalues)
+        merged = segment_reduce(rkeys, tuple(leaves) + (rcounts,), num_keys,
+                                op="sum", valid=mask, use_kernel=use_kernel)
+        vals = jax.tree.unflatten(treedef, list(merged.values[:-1]))
+        out = segment_table_to_partition(vals, merged.values[-1], num_keys)
+        return out, merged.overflow
     merged = segment_reduce(rkeys, rvalues, num_keys, op=op, valid=mask,
                             use_kernel=use_kernel)
     counts = segment_reduce(rkeys, (rcounts,), num_keys, op="sum",

@@ -1,8 +1,17 @@
-from repro.kernels.segment_reduce.ops import (MONOIDS, SegmentReduceResult,
+from repro.kernels.segment_reduce.ops import (MONOIDS, STRATEGIES,
+                                              SegmentReduceResult,
                                               monoid_identity,
+                                              resolve_strategy,
                                               resolve_use_kernel,
                                               segment_reduce,
-                                              segment_reduce_ref)
+                                              segment_reduce_fused,
+                                              segment_reduce_ref,
+                                              segment_reduce_sorted,
+                                              segment_sum_tiled)
+from repro.kernels.segment_reduce.tune import (clear_cache, pick_strategy,
+                                               tune_report)
 
-__all__ = ["segment_reduce", "segment_reduce_ref", "resolve_use_kernel",
-           "SegmentReduceResult", "MONOIDS", "monoid_identity"]
+__all__ = ["segment_reduce", "segment_reduce_ref", "segment_reduce_fused",
+           "segment_reduce_sorted", "segment_sum_tiled", "resolve_use_kernel",
+           "resolve_strategy", "STRATEGIES", "SegmentReduceResult", "MONOIDS",
+           "monoid_identity", "pick_strategy", "tune_report", "clear_cache"]

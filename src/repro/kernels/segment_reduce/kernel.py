@@ -1,18 +1,35 @@
-"""Segment-sum Pallas kernel — the ``reduce_by_key`` combiner hot-spot.
+"""Tiled segment-sum Pallas kernel — the ``reduce_by_key`` combiner hot-spot.
 
-Sort-free scatter-accumulate over a bounded key table: record blocks are
-staged HBM->VMEM; the running ``[num_keys, d]`` aggregate table lives in
-VMEM scratch across the (sequential) block grid.  Each step expands the
-block's keys into a one-hot ``[block, num_keys]`` matrix and accumulates
-``one_hot.T @ values`` into the table — scatter re-expressed as an MXU
-matmul, the same no-data-dependent-gather discipline as the top-k kernel
-(XLA's scatter expander is the measured memory hog this avoids).  Validity
-is masked like ``Partition.mask``: slots beyond the partition count and
-keys outside ``[0, num_keys)`` contribute nothing, and out-of-range keys
-are tallied into an SMEM overflow counter instead of corrupting rows.
+Sort-free scatter-accumulate over a bounded key table, now **tiled on both
+axes**.  The grid is ``(key_tiles, record_blocks)`` with the key axis
+outermost: for key tile ``kt`` only a ``[key_block, d]`` slice of the
+aggregate table is resident in VMEM scratch, and the (sequential) inner
+record-block axis streams ``[block, d]`` record slices HBM->VMEM and
+accumulates into that resident tile.  Each step expands the block's keys
+into a *tile-local* one-hot ``[block, key_block]`` matrix and accumulates
+``one_hot.T @ values`` — scatter re-expressed as an MXU matmul, the same
+no-data-dependent-gather discipline as the top-k kernel (XLA's scatter
+expander is the measured memory hog this avoids).
 
-VMEM working set: block keys/values + the table — block=512, num_keys=4096,
-d=1 f32 is ~48 KiB.  Sum only (max/min fall back to the jnp reference).
+Two things the untiled predecessor got wrong are fixed here:
+
+* **VMEM honesty.**  The old kernel kept the full ``[num_keys, d]`` table
+  (plus a ``[block, num_keys]`` one-hot) resident, so VMEM scaled with the
+  key space; a 4**10 key table at d=128 f32 is 512 MiB and simply does not
+  fit.  Now residency is ``key_block * d`` + ``block * key_block``,
+  chosen to fit the VMEM budget regardless of ``num_keys``.
+* **Block-range early-out.**  A record block whose key range provably
+  misses the resident tile skips the matmul entirely (``@pl.when`` on the
+  block's masked key min/max).  For key-sorted input each record block
+  overlaps ~1 tile, collapsing MXU work from ``records x num_keys`` to
+  ``~records x key_block``; for unsorted input it degrades gracefully to
+  the dense schedule.
+
+Validity is masked like ``Partition.mask``: slots beyond the partition
+count and keys outside ``[0, num_keys)`` contribute nothing; out-of-range
+keys are tallied into an SMEM overflow counter (on the first key tile
+only, so the count is exact) instead of corrupting rows.  Sum only —
+max/min take the jnp reference path (see ops.py).
 """
 from __future__ import annotations
 
@@ -26,16 +43,23 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.common import cdiv, tpu_compiler_params
 
 
-def _segment_sum_kernel(keys_ref, vals_ref, mask_ref,
-                        out_tab_ref, out_cnt_ref, out_ovf_ref,
-                        tab_ref, cnt_ref, ovf_ref, *,
-                        block: int, n: int, num_keys: int, num_blocks: int):
-    bi = pl.program_id(0)
+def _segment_sum_tiled_kernel(keys_ref, vals_ref, mask_ref,
+                              out_tab_ref, out_cnt_ref, out_ovf_ref,
+                              tab_ref, cnt_ref, ovf_ref, *,
+                              block: int, n: int, num_keys: int,
+                              key_block: int, num_blocks: int,
+                              num_key_tiles: int):
+    kt = pl.program_id(0)          # key tile (outer; owns the output tile)
+    bi = pl.program_id(1)          # record block (inner, sequential)
+    tile_lo = kt * key_block
 
     @pl.when(bi == 0)
     def _init():
         tab_ref[...] = jnp.zeros_like(tab_ref)
         cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    @pl.when((kt == 0) & (bi == 0))
+    def _init_ovf():
         ovf_ref[0] = jnp.int32(0)
 
     keys = keys_ref[...]                                  # [block] i32
@@ -43,48 +67,77 @@ def _segment_sum_kernel(keys_ref, vals_ref, mask_ref,
     valid = (ridx < n) & (mask_ref[...] != 0)
     in_range = (keys >= 0) & (keys < num_keys)
     ok = valid & in_range
-    ovf_ref[0] += jnp.sum(valid & ~in_range).astype(jnp.int32)
 
-    kid = jax.lax.broadcasted_iota(jnp.int32, (block, num_keys), 1)
-    one_hot = (keys[:, None] == kid) & ok[:, None]        # [block, num_keys]
-    # zero masked-out rows: grid padding reads garbage (NaN poisons 0*x)
-    vals = jnp.where(ok[:, None], vals_ref[...], 0)       # [block, d]
-    tab_ref[...] += jax.lax.dot_general(
-        one_hot.astype(vals.dtype), vals,
-        dimension_numbers=(((0,), (0,)), ((), ())),
-        preferred_element_type=tab_ref.dtype)             # [num_keys, d]
-    cnt_ref[...] += jnp.sum(one_hot.astype(jnp.int32), axis=0)
+    @pl.when(kt == 0)
+    def _count_overflow():                     # once per record block
+        ovf_ref[0] += jnp.sum(valid & ~in_range).astype(jnp.int32)
+
+    # Block-range early-out: masked key min/max vs this tile's range.
+    # Invalid slots are pushed out of every tile's range so an all-masked
+    # block skips cleanly.
+    kmin = jnp.min(jnp.where(ok, keys, num_keys))
+    kmax = jnp.max(jnp.where(ok, keys, -1))
+    overlaps = (kmin < tile_lo + key_block) & (kmax >= tile_lo)
+
+    @pl.when(overlaps)
+    def _accumulate():
+        local = keys - tile_lo                            # tile-local key
+        kid = jax.lax.broadcasted_iota(jnp.int32, (block, key_block), 1)
+        one_hot = (local[:, None] == kid) & ok[:, None]   # [block, key_block]
+        # zero masked-out rows: grid padding reads garbage (NaN poisons 0*x)
+        vals = jnp.where(ok[:, None], vals_ref[...], 0)   # [block, d]
+        tab_ref[...] += jax.lax.dot_general(
+            one_hot.astype(vals.dtype), vals,
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=tab_ref.dtype)         # [key_block, d]
+        cnt_ref[...] += jnp.sum(one_hot.astype(jnp.int32), axis=0)
 
     @pl.when(bi == num_blocks - 1)
     def _finalize():
         out_tab_ref[...] = tab_ref[...]
         out_cnt_ref[...] = cnt_ref[...]
+
+    @pl.when((kt == num_key_tiles - 1) & (bi == num_blocks - 1))
+    def _finalize_ovf():
         out_ovf_ref[0] = ovf_ref[0]
 
 
-def segment_sum_kernel(keys: jnp.ndarray, values: jnp.ndarray,
-                       num_keys: int, valid: jnp.ndarray,
-                       block: int = 512, interpret: bool = True):
-    """keys [n] i32, values [n, d], valid [n] bool -> (table [num_keys, d],
-    counts [num_keys] i32, overflow [1] i32)."""
+def segment_sum_tiled(keys: jnp.ndarray, values: jnp.ndarray,
+                      num_keys: int, valid: jnp.ndarray,
+                      block: int = 512, key_block: int = 1024,
+                      interpret: bool = True):
+    """Tiled Pallas segment sum.
+
+    ``keys`` [n] i32, ``values`` [n, d], ``valid`` [n] bool ->
+    ``(table [num_keys, d], counts [num_keys] i32, overflow [1] i32)``.
+
+    ``block`` is the record-block length streamed per grid step;
+    ``key_block`` is the key-table tile resident in VMEM (clamped to
+    ``num_keys``; neither needs to divide its axis — edge tiles are
+    masked).  Defaults suit a v5e core; the autotuner in ``tune.py``
+    picks per-shape winners.
+    """
     n = keys.shape[0]
     d = values.shape[1]
     block = min(block, max(8, n))
+    key_block = min(key_block, num_keys)
     nb = cdiv(n, block)
-    kernel = functools.partial(_segment_sum_kernel, block=block, n=n,
-                               num_keys=num_keys, num_blocks=nb)
+    nk = cdiv(num_keys, key_block)
+    kernel = functools.partial(_segment_sum_tiled_kernel, block=block, n=n,
+                               num_keys=num_keys, key_block=key_block,
+                               num_blocks=nb, num_key_tiles=nk)
     mask = jnp.asarray(valid).astype(jnp.int32)
     return pl.pallas_call(
         kernel,
-        grid=(nb,),
+        grid=(nk, nb),
         in_specs=[
-            pl.BlockSpec((block,), lambda b: (b,)),
-            pl.BlockSpec((block, d), lambda b: (b, 0)),
-            pl.BlockSpec((block,), lambda b: (b,)),
+            pl.BlockSpec((block,), lambda k, b: (b,)),
+            pl.BlockSpec((block, d), lambda k, b: (b, 0)),
+            pl.BlockSpec((block,), lambda k, b: (b,)),
         ],
         out_specs=[
-            pl.BlockSpec((num_keys, d), lambda b: (0, 0)),
-            pl.BlockSpec((num_keys,), lambda b: (0,)),
+            pl.BlockSpec((key_block, d), lambda k, b: (k, 0)),
+            pl.BlockSpec((key_block,), lambda k, b: (k,)),
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
         out_shape=[
@@ -93,11 +146,20 @@ def segment_sum_kernel(keys: jnp.ndarray, values: jnp.ndarray,
             jax.ShapeDtypeStruct((1,), jnp.int32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((num_keys, d), values.dtype),
-            pltpu.VMEM((num_keys,), jnp.int32),
+            pltpu.VMEM((key_block, d), values.dtype),
+            pltpu.VMEM((key_block,), jnp.int32),
             pltpu.SMEM((1,), jnp.int32),
         ],
         compiler_params=tpu_compiler_params(
-            dimension_semantics=("arbitrary",)),
+            dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )(keys.astype(jnp.int32), values, mask)
+
+
+#: Back-compat alias — the untiled kernel is the tiled one with the whole
+#: key table as a single tile.
+def segment_sum_kernel(keys: jnp.ndarray, values: jnp.ndarray,
+                       num_keys: int, valid: jnp.ndarray,
+                       block: int = 512, interpret: bool = True):
+    return segment_sum_tiled(keys, values, num_keys, valid, block=block,
+                             key_block=num_keys, interpret=interpret)

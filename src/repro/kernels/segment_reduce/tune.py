@@ -1,0 +1,233 @@
+"""First-compile autotuner for segment reduce.
+
+``segment_reduce(..., use_kernel=None)`` doesn't hardcode a strategy: the
+first time a given problem shape is traced, :func:`pick_strategy` runs
+every eligible implementation on synthetic data of that exact shape,
+times a few warm repetitions each, and caches the winner per
+
+    (backend, op, n, num_keys, leaf-signature)
+
+where the leaf signature is the tuple of ``(trailing shape, dtype)`` per
+value leaf.  Tuning happens *at trace time* — candidate impls are jit'd
+and executed on concrete arrays while the caller's trace is suspended,
+which jax supports because ``jax.jit`` on fresh concrete inputs opens an
+independent trace.  The cost is a few milliseconds per distinct shape,
+paid once per process and amortized by the plan cache (a cached compiled
+program never re-traces, so it never re-tunes).
+
+Candidate set (see docs/kernels.md for the measured numbers):
+
+* ``scatter`` — :func:`segment_reduce_ref`, one ``.at[].add`` per leaf.
+* ``fused``   — :func:`segment_reduce_fused`, dtype-grouped single scatter
+  (the CPU winner: XLA CPU pays per scatter op, not per column).
+* ``sorted``  — :func:`segment_reduce_sorted`, argsort + cumsum + diff
+  (integer leaves only; exact by wraparound cancellation).
+* ``tiled[b,kb]`` — the Pallas kernel of ``kernel.py`` over a small grid
+  of ``(block, key_block)`` tilings, filtered by the VMEM budget.  Only
+  offered on TPU: in interpret mode (CPU) each grid step costs ~30ms of
+  pure Python, so it can never win — set ``REPRO_SEGMENT_TUNE_PALLAS=1``
+  to force it into the candidate set anyway (tests do, to exercise the
+  plumbing).
+
+Environment knobs:
+
+* ``REPRO_SEGMENT_AUTOTUNE=0`` — skip measurement; return the static
+  heuristic (``tiled`` on TPU, ``fused`` elsewhere) without running
+  candidates.  Useful when trace determinism matters more than the last
+  2x.
+* ``REPRO_SEGMENT_TUNE_PALLAS=1`` — include Pallas tilings off-TPU.
+
+:func:`tune_report` exposes everything tried this process (chosen
+strategy, per-candidate timings) — ``benchmarks/kmer.py`` embeds it in
+``BENCH_kmer.json`` and ``benchmarks/summary.py`` renders the tiling
+table from it.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.common import VMEM_BYTES, use_interpret
+
+#: strategies a Strategy.name may take (``tiled`` carries block params too)
+STRATEGIES = ("scatter", "fused", "sorted", "tiled")
+
+#: (block, key_block) tilings the tuner tries for the Pallas kernel
+TILINGS = ((256, 512), (512, 1024), (512, 4096), (1024, 2048))
+
+_WARMUP = 1
+_REPS = 3
+
+# cache + report, process-wide.  Keyed by _cache_key(); values are
+# (strategy_name, block, key_block).
+_CACHE: Dict[Tuple, Tuple[str, int, int]] = {}
+_REPORT: List[Dict[str, Any]] = []
+
+
+def _leaf_signature(values: Any) -> Tuple:
+    return tuple((tuple(leaf.shape[1:]), jnp.dtype(leaf.dtype).name)
+                 for leaf in jax.tree.leaves(values))
+
+
+def _cache_key(backend: str, op: str, n: int, num_keys: int,
+               leaf_sig: Tuple) -> Tuple:
+    return (backend, op, n, num_keys, leaf_sig)
+
+
+def _all_int_leaves(leaf_sig: Tuple) -> bool:
+    return all(np.issubdtype(np.dtype(name), np.integer)
+               for _, name in leaf_sig)
+
+
+def _vmem_fits(block: int, key_block: int, d: int, itemsize: int) -> bool:
+    """Rough VMEM residency of one grid step of the tiled kernel."""
+    table = key_block * max(d, 1) * itemsize        # resident tile (x2: out)
+    counts = key_block * 4
+    one_hot = block * key_block * itemsize          # intermediate
+    records = block * max(d, 1) * itemsize
+    return 2 * table + 2 * counts + one_hot + records <= VMEM_BYTES // 2
+
+
+def _synthetic(n: int, num_keys: int, leaf_sig: Tuple):
+    """Concrete sample problem matching the traced shapes.
+
+    Keys are a fixed permutation-ish pattern (golden-ratio stride) so every
+    strategy sees realistic scatter conflicts; no RNG, so tuning is
+    deterministic per shape.
+    """
+    idx = np.arange(max(n, 1), dtype=np.uint64)
+    keys = ((idx * np.uint64(2654435761)) % np.uint64(max(num_keys, 1)))
+    keys = jnp.asarray(keys.astype(np.int32))
+    leaves = [jnp.ones((n,) + shape, np.dtype(name))
+              for shape, name in leaf_sig]
+    valid = jnp.ones((n,), bool)
+    return keys, leaves, valid
+
+
+def _time_callable(fn, *args) -> float:
+    for _ in range(_WARMUP):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(_REPS):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / _REPS
+
+
+def _candidates(backend: str, op: str, n: int, num_keys: int,
+                leaf_sig: Tuple) -> List[Tuple[str, int, int]]:
+    cands: List[Tuple[str, int, int]] = [("fused", 0, 0), ("scatter", 0, 0)]
+    if _all_int_leaves(leaf_sig):
+        cands.append(("sorted", 0, 0))
+    want_pallas = (backend == "tpu"
+                   or os.environ.get("REPRO_SEGMENT_TUNE_PALLAS") == "1")
+    if want_pallas:
+        for block, key_block in TILINGS:
+            d = 1
+            itemsize = 4
+            for shape, name in leaf_sig:
+                d = max(d, int(np.prod(shape)) if shape else 1)
+                itemsize = max(itemsize, np.dtype(name).itemsize)
+            if _vmem_fits(block, key_block, d, itemsize):
+                cands.append(("tiled", min(block, max(8, n)),
+                              min(key_block, num_keys)))
+    # dedupe clamped tilings
+    seen = set()
+    uniq = []
+    for c in cands:
+        if c not in seen:
+            seen.add(c)
+            uniq.append(c)
+    return uniq
+
+
+def _default_strategy(backend: str) -> Tuple[str, int, int]:
+    if backend == "tpu":
+        return ("tiled", 512, 1024)
+    return ("fused", 0, 0)
+
+
+def pick_strategy(op: str, n: int, num_keys: int, values: Any,
+                  backend: Optional[str] = None) -> Tuple[str, int, int]:
+    """Return ``(strategy, block, key_block)`` for this problem shape.
+
+    Measured once per (backend, op, shape signature) and cached for the
+    process; safe to call from inside a trace (tuning runs its own jits on
+    concrete synthetic arrays).  Non-sum monoids always resolve to
+    ``scatter`` — the fused/sorted/tiled paths are sum-only.
+    """
+    if op != "sum":
+        return ("scatter", 0, 0)
+    backend = backend or jax.default_backend()
+    leaf_sig = _leaf_signature(values)
+    key = _cache_key(backend, op, n, num_keys, leaf_sig)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        return hit
+    if os.environ.get("REPRO_SEGMENT_AUTOTUNE") == "0" or n == 0:
+        choice = _default_strategy(backend) if backend == "tpu" \
+            else ("fused", 0, 0)
+        if choice[0] == "tiled":
+            choice = ("tiled", min(choice[1], max(8, n)),
+                      min(choice[2], num_keys))
+        _CACHE[key] = choice
+        return choice
+    choice = _measure(key, op, n, num_keys, leaf_sig, backend)
+    _CACHE[key] = choice
+    return choice
+
+
+def _measure(key: Tuple, op: str, n: int, num_keys: int, leaf_sig: Tuple,
+             backend: str) -> Tuple[str, int, int]:
+    from repro.kernels.segment_reduce import ops as _ops
+    from repro.obs import TRACER
+
+    keys, leaves, valid = _synthetic(n, num_keys, leaf_sig)
+    values = tuple(leaves)
+    rows: List[Dict[str, Any]] = []
+    best: Optional[Tuple[float, Tuple[str, int, int]]] = None
+    with TRACER.span("segment_reduce.autotune",
+                     n=n, num_keys=num_keys, backend=backend):
+        for strat, block, key_block in _candidates(backend, op, n, num_keys,
+                                                   leaf_sig):
+            def run(k, v, m, _s=strat, _b=block, _kb=key_block):
+                return _ops.segment_reduce_impl(
+                    k, v, num_keys, op=op, valid=m, strategy=_s,
+                    block=_b, key_block=_kb,
+                    interpret=use_interpret())
+            try:
+                dt = _time_callable(run, keys, values, valid)
+            except Exception:        # a candidate failing must not poison tune
+                continue
+            label = (f"tiled[{block},{key_block}]" if strat == "tiled"
+                     else strat)
+            rows.append({"candidate": label, "ms": round(dt * 1e3, 4)})
+            if best is None or dt < best[0]:
+                best = (dt, (strat, block, key_block))
+    choice = best[1] if best else ("scatter", 0, 0)
+    _REPORT.append({
+        "backend": backend, "op": op, "n": n, "num_keys": num_keys,
+        "leaves": [list(map(str, sig)) for sig in leaf_sig],
+        "chosen": (f"tiled[{choice[1]},{choice[2]}]"
+                   if choice[0] == "tiled" else choice[0]),
+        "block": choice[1], "key_block": choice[2],
+        "candidates": rows,
+    })
+    return choice
+
+
+def tune_report() -> List[Dict[str, Any]]:
+    """Everything tuned this process: one entry per distinct shape with the
+    chosen strategy and all candidate timings (JSON-serializable)."""
+    return list(_REPORT)
+
+
+def clear_cache() -> None:
+    """Drop tuning decisions + report (tests use this for isolation)."""
+    _CACHE.clear()
+    _REPORT.clear()

@@ -50,6 +50,10 @@ from repro.runtime.reports import ActionReport, ReportLog
 #: whatever gets persisted under the losing one.
 _LINEAGE_LOCK = threading.Lock()
 
+#: Counter kinds reduced with max across shards instead of sum (bounds,
+#: not totals) — see :func:`repro.core.plan.stage_counter_kinds`.
+MAX_COUNTER_KINDS = frozenset({"max_send_count"})
+
 
 def check_counters(counter_vec: jax.Array, specs, num_shards: int,
                    diagnostics: Optional[Dict[str, int]] = None,
@@ -61,9 +65,18 @@ def check_counters(counter_vec: jax.Array, specs, num_shards: int,
     ``"stage<i>.<kind>"``).  ``stage_offset`` shifts reported stage
     indices when the dispatched program was a suffix of a longer plan
     (prefix served from the materialization cache).
+
+    Most kinds are totals and sum across shards; ``max_send_count`` is a
+    bound and max-reduces instead — its diagnostic is the tightest
+    per-destination ``capacity=`` that would have been lossless for any
+    shard this run (the capacity-feedback knob for re-planning a skewed
+    exchange).
     """
-    per = np.asarray(jax.device_get(counter_vec)).reshape(
-        num_shards, len(specs)).sum(axis=0)
+    grid = np.asarray(jax.device_get(counter_vec)).reshape(
+        num_shards, len(specs))
+    per = [int(grid[:, i].max()) if kind in MAX_COUNTER_KINDS
+           else int(grid[:, i].sum())
+           for i, (_, kind) in enumerate(specs)]
     for (stage_idx, kind), total in zip(specs, per):
         METRICS.counter(f"counters.{kind}").inc(int(total))
     if diagnostics is not None:

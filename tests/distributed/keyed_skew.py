@@ -1,0 +1,55 @@
+"""8-device skew-aware keyed exchange: the salted two-hop path must
+shrink exchange buffers on hot-key data (it cannot on 1 device — there
+is nowhere to spread — so these properties live here, not in
+tests/test_planner.py), and ``max_send_count`` must be a valid feedback
+capacity for re-planning."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+from repro.core import MaRe, PlanCache
+
+rng = np.random.default_rng(5)
+n, num_keys, hot, frac = 2048, 32, 7, 0.9
+keys = np.where(rng.random(n) < frac, hot,
+                rng.integers(0, num_keys, n)).astype(np.int32)
+vals = rng.integers(0, 10, n).astype(np.int32)
+expected = {int(k): (int(vals[keys == k].sum()), int((keys == k).sum()))
+            for k in np.unique(keys)}
+
+
+def keyed(**kw):
+    return MaRe((keys, vals), plan_cache=PlanCache()).reduce_by_key(
+        lambda r: r[0], value_by=lambda r: (r[1],), op="sum",
+        num_keys=num_keys, combiner=False, **kw)
+
+
+# salted parity: the two-hop exchange is lossless and exact on hot keys
+sal = keyed(salt=8)
+out_keys, (out_sum,), out_cnt = sal.collect()
+got = {int(k): (int(s), int(c))
+       for k, s, c in zip(out_keys, out_sum, out_cnt)}
+assert got == expected, (got, expected)
+assert sal.last_diagnostics["stage0.shuffle_dropped"] == 0
+assert sal.last_diagnostics["stage0.key_overflow"] == 0
+
+# salting shrinks the static exchange buffers vs the single-hop baseline
+raw = keyed()
+raw.collect()
+rows_raw = raw.last_diagnostics["stage0.exchange_buffer_rows"]
+rows_sal = sal.last_diagnostics["stage0.exchange_buffer_rows"]
+assert rows_sal < rows_raw, (rows_sal, rows_raw)
+# hop-1 spreads the hot key: no destination sees ~90% of a shard
+assert (sal.last_diagnostics["stage0.max_send_count"]
+        < raw.last_diagnostics["stage0.max_send_count"])
+
+# max_send_count is a valid feedback capacity: re-plan with the reported
+# tight bound, still lossless, smaller buffers
+tight = raw.last_diagnostics["stage0.max_send_count"]
+assert 0 < tight <= len(keys)
+rerun = keyed(capacity=tight)
+rerun.collect()
+assert rerun.last_diagnostics["stage0.shuffle_dropped"] == 0
+assert (rerun.last_diagnostics["stage0.exchange_buffer_rows"]
+        < raw.last_diagnostics["stage0.exchange_buffer_rows"])
+
+print("OK")

@@ -105,3 +105,105 @@ def test_unknown_monoid_raises():
     with pytest.raises(ValueError, match="unknown segment-reduce op"):
         segment_reduce_ref(jnp.zeros((4,), jnp.int32),
                            (jnp.zeros((4,), jnp.float32),), 2, op="mean")
+
+
+# -- degenerate tilings & strategy engine (tiled kernel + autotuner) ----------
+
+@pytest.mark.parametrize("n,num_keys,d,block,key_block", [
+    (0, 8, 2, 64, 8),        # empty shard (short-circuits to scatter)
+    (64, 1, 1, 16, 1),       # single key: one-row table
+    (513, 200, 2, 128, 96),  # num_keys not divisible by key_block
+    (200, 64, 3, 512, 16),   # block > n, many key tiles
+])
+def test_tiled_degenerate_tilings_match_numpy(n, num_keys, d, block,
+                                              key_block):
+    keys, vals, valid = _case(n, num_keys, d, np.float32)
+    got = segment_reduce(jnp.asarray(keys), (jnp.asarray(vals),), num_keys,
+                         op="sum", valid=jnp.asarray(valid),
+                         use_kernel=True, block=block, key_block=key_block,
+                         interpret=True)
+    tab, cnt, ovf = _np_segment_sum(keys, vals, valid, num_keys)
+    np.testing.assert_allclose(np.asarray(got.values[0]), tab,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got.counts), cnt)
+    assert int(got.overflow) == ovf
+
+
+def test_tiled_all_masked_records():
+    keys = jnp.asarray(np.full(64, 5, np.int32))
+    valid = jnp.zeros((64,), bool)
+    got = segment_reduce(keys, (jnp.ones((64, 2), jnp.float32),), 32,
+                         op="sum", valid=valid, use_kernel=True,
+                         block=16, key_block=8, interpret=True)
+    assert np.asarray(got.values[0]).sum() == 0
+    assert np.asarray(got.counts).sum() == 0
+    assert int(got.overflow) == 0
+
+
+def test_tiled_hot_key_distribution():
+    n, num_keys = 1024, 64
+    keys = np.where(RNG.random(n) < 0.9, 7,
+                    RNG.integers(0, num_keys, n)).astype(np.int32)
+    vals = RNG.integers(0, 100, (n, 2)).astype(np.int32)
+    valid = RNG.random(n) < 0.8
+    got = segment_reduce(jnp.asarray(keys), (jnp.asarray(vals),), num_keys,
+                         op="sum", valid=jnp.asarray(valid),
+                         use_kernel=True, block=128, key_block=16,
+                         interpret=True)
+    tab, cnt, ovf = _np_segment_sum(keys, vals, valid, num_keys)
+    np.testing.assert_array_equal(np.asarray(got.values[0]), tab)
+    np.testing.assert_array_equal(np.asarray(got.counts), cnt)
+
+
+@pytest.mark.parametrize("strategy", ["scatter", "fused", "sorted"])
+def test_explicit_strategies_match_reference(strategy):
+    keys, vals, valid = _case(777, 101, 2, np.int32)
+    got = segment_reduce(jnp.asarray(keys), (jnp.asarray(vals),), 101,
+                         op="sum", valid=jnp.asarray(valid),
+                         strategy=strategy)
+    ref = segment_reduce_ref(jnp.asarray(keys), (jnp.asarray(vals),), 101,
+                             op="sum", valid=jnp.asarray(valid))
+    np.testing.assert_array_equal(np.asarray(got.values[0]),
+                                  np.asarray(ref.values[0]))
+    np.testing.assert_array_equal(np.asarray(got.counts),
+                                  np.asarray(ref.counts))
+    assert int(got.overflow) == int(ref.overflow)
+
+
+def test_fused_strategy_mixed_dtypes_pytree():
+    keys, _, valid = _case(300, 17, 1, np.float32)
+    vals = {"f": jnp.asarray(RNG.normal(size=(300, 2)).astype(np.float32)),
+            "i": jnp.asarray(RNG.integers(0, 9, 300).astype(np.int32))}
+    got = segment_reduce(jnp.asarray(keys), vals, 17, op="sum",
+                         valid=jnp.asarray(valid), strategy="fused")
+    ref = segment_reduce_ref(jnp.asarray(keys), vals, 17, op="sum",
+                             valid=jnp.asarray(valid))
+    np.testing.assert_allclose(np.asarray(got.values["f"]),
+                               np.asarray(ref.values["f"]), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got.values["i"]),
+                                  np.asarray(ref.values["i"]))
+    np.testing.assert_array_equal(np.asarray(got.counts),
+                                  np.asarray(ref.counts))
+
+
+def test_tuned_default_matches_reference_and_reports():
+    from repro.kernels.segment_reduce import tune_report
+    keys, vals, valid = _case(900, 50, 1, np.int32)
+    got = segment_reduce(jnp.asarray(keys), (jnp.asarray(vals),), 50,
+                         op="sum", valid=jnp.asarray(valid))  # autotuned
+    ref = segment_reduce_ref(jnp.asarray(keys), (jnp.asarray(vals),), 50,
+                             op="sum", valid=jnp.asarray(valid))
+    np.testing.assert_array_equal(np.asarray(got.values[0]),
+                                  np.asarray(ref.values[0]))
+    entries = [e for e in tune_report() if e["n"] == 900]
+    assert entries, "autotuner should have recorded this shape"
+    assert entries[0]["candidates"], "candidates should have been timed"
+    assert entries[0]["chosen"] in {c["candidate"]
+                                    for c in entries[0]["candidates"]}
+
+
+def test_unknown_strategy_raises():
+    with pytest.raises(ValueError, match="unknown segment-reduce strategy"):
+        segment_reduce(jnp.zeros((4,), jnp.int32),
+                       (jnp.zeros((4,), jnp.float32),), 2,
+                       strategy="magic")

@@ -351,6 +351,58 @@ def test_keyed_bucket_capacity_matches_device_hash():
     assert keyed_bucket_capacity(num_keys, n) == int(caps.max())
 
 
+def test_keyed_bucket_capacities_partition_the_key_space():
+    from repro.core.shuffle import keyed_bucket_capacities
+    caps = keyed_bucket_capacities(1000, 8)
+    assert caps.shape == (8,)
+    assert int(caps.sum()) == 1000            # every key owned exactly once
+    assert int(caps.max()) == keyed_bucket_capacity(1000, 8)
+
+
+# -- hot-key skew: the salted two-hop exchange --------------------------------
+
+def _hot_key_data(n=2048, num_keys=32, hot=7, frac=0.9):
+    rng = np.random.default_rng(5)
+    keys = np.where(rng.random(n) < frac, hot,
+                    rng.integers(0, num_keys, n)).astype(np.int32)
+    vals = rng.integers(0, 10, n).astype(np.int32)
+    return keys, vals
+
+
+def test_reduce_by_key_salted_hot_key_matches_groupby():
+    keys, vals = _hot_key_data()
+    sal = _keyed((keys, vals), num_keys=32, combiner=False, salt=8)
+    out_keys, (out_sum,), out_cnt = sal.collect()
+    got = {int(k): (int(s), int(c))
+           for k, s, c in zip(out_keys, out_sum, out_cnt)}
+    exp = {int(k): (int(vals[keys == k].sum()), int((keys == k).sum()))
+           for k in np.unique(keys)}
+    assert got == exp
+    assert sal.last_diagnostics["stage0.shuffle_dropped"] == 0
+    assert sal.last_diagnostics["stage0.key_overflow"] == 0
+
+
+def test_salted_diagnostics_present_and_lossless():
+    # Buffer-SHRINK properties of salting need a multi-device mesh (there
+    # is nowhere to spread on 1 device) and live in
+    # tests/distributed/keyed_skew.py; here: the diagnostics contract.
+    keys, vals = _hot_key_data()
+    sal = _keyed((keys, vals), num_keys=32, combiner=False, salt=8)
+    sal.collect()
+    d = sal.last_diagnostics
+    assert d["stage0.shuffle_dropped"] == 0
+    assert 0 < d["stage0.max_send_count"] <= len(keys)
+    assert d["stage0.exchange_buffer_rows"] > 0
+
+
+def test_salt_validation():
+    keys, vals = _kv_data()
+    with pytest.raises(ValueError, match="salt must be >= 1"):
+        _keyed((keys, vals), salt=0)
+    with pytest.raises(ValueError, match="requires combiner=False"):
+        _keyed((keys, vals), combiner=True, salt=4)
+
+
 # -- plan structure & describe ------------------------------------------------
 
 def test_plan_builder_fuses_adjacent_maps():
@@ -381,7 +433,8 @@ def test_describe_shows_keyed_stage_and_counter_specs():
     assert m.plan.counter_specs() == (
         (0, "shuffle_dropped"),
         (1, "key_overflow"), (1, "shuffle_dropped"),
-        (1, "exchanged_records"))
+        (1, "exchanged_records"), (1, "max_send_count"),
+        (1, "exchange_buffer_rows"))
 
 
 def test_dataset_property_materializes_pending_plan():

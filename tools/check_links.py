@@ -1,0 +1,68 @@
+"""Check intra-repo markdown links in README.md and docs/*.md.
+
+Every relative link target (``[text](path)`` and ``[text](path#anchor)``)
+must exist on disk, resolved against the file containing the link;
+``#anchor``-only links are checked against the same file's headings
+(GitHub slug rules: lowercase, spaces to dashes, punctuation dropped).
+External links (http/https/mailto) are not fetched — CI must not depend
+on the network. Exit code 1 lists every broken link.
+
+  python tools/check_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"^```.*?^```", re.MULTILINE | re.DOTALL)
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor slug: strip markup, lowercase, spaces -> dashes."""
+    text = re.sub(r"[`*_\[\]()]", "", heading).strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def check_file(path: str) -> list:
+    with open(path) as f:
+        raw = f.read()
+    body = CODE_FENCE_RE.sub("", raw)          # links in code blocks are text
+    anchors = {slugify(h) for h in HEADING_RE.findall(body)}
+    errors = []
+    for target in LINK_RE.findall(body):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        dest, _, fragment = target.partition("#")
+        if not dest:                           # same-file #anchor
+            if fragment and slugify(fragment) not in anchors:
+                errors.append(f"{path}: broken anchor '#{fragment}'")
+            continue
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path), dest))
+        if not os.path.exists(resolved):
+            errors.append(f"{path}: broken link '{target}' "
+                          f"(resolved: {resolved})")
+    return errors
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else "."
+    files = sorted(glob.glob(os.path.join(root, "README.md"))
+                   + glob.glob(os.path.join(root, "docs", "*.md")))
+    if not files:
+        print("check_links: no markdown files found", file=sys.stderr)
+        return 1
+    errors = [e for path in files for e in check_file(path)]
+    for err in errors:
+        print(err, file=sys.stderr)
+    print(f"check_links: {len(files)} files, "
+          f"{len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
