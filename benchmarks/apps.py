@@ -90,26 +90,26 @@ def virtual_screening(library, mesh=None, top: int = 30, rounds: int = 8,
     """Paper Listing 2 — returns (scores [top], mol_ids [top])."""
     _register_once()
     pipeline = (MaRe(library, mesh=mesh)
-                .map(inputMountPoint=TextFile("/in.sdf", "\n$$$$\n"),
-                     outputMountPoint=TextFile("/out.sdf", "\n$$$$\n"),
+                .map(input_mount=TextFile("/in.sdf", "\n$$$$\n"),
+                     output_mount=TextFile("/out.sdf", "\n$$$$\n"),
                      image="tools/fred", rounds=rounds)
-                .reduce(inputMountPoint=TextFile("/in.sdf", "\n$$$$\n"),
-                        outputMountPoint=TextFile("/out.sdf", "\n$$$$\n"),
+                .reduce(input_mount=TextFile("/in.sdf", "\n$$$$\n"),
+                        output_mount=TextFile("/out.sdf", "\n$$$$\n"),
                         image="toolbox/topk", k=top, depth=depth))
-    return pipeline.collect_first_shard()
+    return pipeline.collect(shard=0)
 
 
 def snp_calling(reads, mesh=None, rounds: int = 4):
     """Paper Listing 3 — returns (chrom, score, read_id) variant arrays."""
     _register_once()
     m = (MaRe(reads, mesh=mesh)
-         .map(inputMountPoint=TextFile("/in.fastq"),
-              outputMountPoint=TextFile("/out.sam"),
+         .map(input_mount=TextFile("/in.fastq"),
+              output_mount=TextFile("/out.sam"),
               image="tools/bwa", rounds=rounds)
          .repartition_by(lambda recs: recs[0])      # keyBy chromosome
          .map(image="tools/gatk")
          .reduce(image="toolbox/concat", depth=2))
-    return m.collect_first_shard()
+    return m.collect(shard=0)
 
 
 def vs_reference(library, top: int = 30, rounds: int = 8):

@@ -126,8 +126,8 @@ def run_mode(ds, mesh, k: int, num_keys: int, mode: Dict,
     cold = time.monotonic() - t0
     got = {int(a): int(b) for a, b in zip(keys, occ)}
     assert got == expected, "k-mer table mismatch vs numpy reference"
-    exchanged = m.last_diagnostics["stage1.exchanged_records"]
-    rep = m.reports.latest
+    exchanged = m.report().diagnostics["stage1.exchanged_records"]
+    rep = m.report()
     r = {
         "compiles": cache.stats()["misses"],
         "cold_s": cold,
@@ -136,10 +136,10 @@ def run_mode(ds, mesh, k: int, num_keys: int, mode: Dict,
         "phases_cold": {p: round(s, 6) for p, s in rep.phases.items()},
         "exchanged_records": exchanged,
         "exchanged_bytes": exchanged * ROW_BYTES,
-        "max_send_count": m.last_diagnostics["stage1.max_send_count"],
+        "max_send_count": m.report().diagnostics["stage1.max_send_count"],
         "exchange_buffer_rows":
-            m.last_diagnostics["stage1.exchange_buffer_rows"],
-        "key_overflow": m.last_diagnostics["stage1.key_overflow"],
+            m.report().diagnostics["stage1.exchange_buffer_rows"],
+        "key_overflow": m.report().diagnostics["stage1.key_overflow"],
         "cache": cache,
     }
     return r
@@ -158,7 +158,7 @@ def run_warm(ds, mesh, k: int, num_keys: int, modes: Dict[str, Dict],
             m = build_pipeline(ds, mesh, cache, k, num_keys, mode)
             m.collect()
             times[name].append(time.monotonic() - t0)
-            for p, s in m.reports.latest.phases.items():
+            for p, s in m.report().phases.items():
                 phase_acc[name][p] = phase_acc[name].get(p, 0.0) + s
     for name, r in results.items():
         r["warm_mean_s"] = float(np.mean(times[name]))
@@ -203,7 +203,7 @@ def run_skew(mesh, n_records: int, num_keys: int, reps: int) -> Dict:
             t0 = time.monotonic()
             _skew_pipeline(ds, mesh, cache, num_keys, salt).collect()
             times.append(time.monotonic() - t0)
-        d = m.last_diagnostics
+        d = m.report().diagnostics
         rows = d["stage0.exchange_buffer_rows"]
         out[name] = {
             "salt": salt,

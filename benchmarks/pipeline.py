@@ -94,7 +94,7 @@ def run_cold(ds, mesh, expected_gc: int, fuse: bool) -> Dict:
     cache = PlanCache()
     t0 = time.monotonic()
     (gc_sum, _) = build_pipeline(ds, mesh, cache, fuse)\
-        .collect_first_shard()
+        .collect(shard=0)
     cold = time.monotonic() - t0
     assert int(gc_sum[0]) == expected_gc, (int(gc_sum[0]), expected_gc)
     return {"compiles": cache.stats()["misses"], "cold_s": cold,
@@ -112,7 +112,7 @@ def run_warm(ds, mesh, expected_gc: int, modes: Dict[str, Dict],
             t0 = time.monotonic()
             (gc_sum, _) = build_pipeline(
                 ds, mesh, r["cache"], fuse=(name == "fused"))\
-                .collect_first_shard()
+                .collect(shard=0)
             times[name].append(time.monotonic() - t0)
             assert int(gc_sum[0]) == expected_gc
     for name, r in modes.items():

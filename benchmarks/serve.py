@@ -1,0 +1,323 @@
+"""Multi-tenant serving benchmark: fairness, batching, prefix sharing.
+
+N concurrent tenant sessions (threads, barrier-synced rounds so every
+tenant fires the same query at the same instant) drive one shared
+:class:`repro.serve.QueryService` in three isolated modes (fresh
+executor + compile cache + materialization cache each):
+
+* **single** — ONE session issues the same TOTAL number of queries
+  sequentially over the persisted shared prefix: the no-contention
+  latency baseline for the fairness criterion;
+* **cold**   — N sessions, no persisted prefix, batching disabled:
+  every query pays its own full-plan dispatch through the fair
+  scheduler (the naive multi-tenant deployment);
+* **shared** — N sessions over the persisted shared prefix with
+  batching on: identical queries coalesce into one suffix-only dispatch
+  per round, and each tenant additionally persists private datasets
+  under a small per-tenant cache budget to exercise partition eviction.
+
+Invariants asserted in-script (everything but the two latency ratios is
+wall-clock-free; the ratios are this benchmark's acceptance criteria —
+they compare modes on the same machine in the same run, so machine speed
+divides out):
+
+* every mode and every tenant computes identical query results;
+* measured rounds compile zero programs in every mode;
+* ``tenant_budget_violations == 0`` and no tenant's cache footprint
+  exceeds its partition after the private-persist churn (one tenant's
+  evictions never touch another tenant's entries);
+* shared mode actually batches (mean occupancy > 1) and actually shares
+  (``shared_hits > 0``);
+* shared-prefix p50 <= 0.6x cold p50;
+* worst per-tenant p99 under fair scheduling (shared mode) <= 2x the
+  single-tenant p99 at the same total load.
+
+  PYTHONPATH=src python benchmarks/serve.py [--small]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import threading
+import time
+from typing import Dict, List
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+import jax                                           # noqa: E402
+
+from repro import compat                             # noqa: E402
+from repro.core import MaRe, PlanCache               # noqa: E402
+from repro.core.dataset import from_host             # noqa: E402
+from repro.obs import METRICS                        # noqa: E402
+from repro.runtime import (Executor,                 # noqa: E402
+                           MaterializationCache, estimate_nbytes)
+from repro.serve import QueryService, ServiceConfig  # noqa: E402
+
+READ_LEN = 64
+QUERY_OPS = ("sum", "max", "min")
+
+
+def make_reads(n_reads: int, seed: int = 0) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    bases = np.frombuffer(b"ACGT", np.uint8)
+    data = bases[rng.integers(0, 4, size=(n_reads, READ_LEN))]
+    return {"data": data, "len": np.full((n_reads,), READ_LEN, np.int32)}
+
+
+def _key_of(recs):
+    # module-level keyBy/valueBy: lineage signatures, the compile cache
+    # AND the serving batch key all key on callable identity — fresh
+    # lambdas would defeat cross-session coalescing entirely
+    return recs[0]
+
+
+def _ones_of(recs):
+    return (recs[1],)
+
+
+def _normalize(result):
+    keys, (vals,), counts = result
+    order = np.argsort(np.asarray(keys))
+    return (np.asarray(keys)[order].tolist(),
+            np.asarray(vals)[order].tolist(),
+            np.asarray(counts)[order].tolist())
+
+
+def _pct(samples: List[float], q: float) -> float:
+    s = np.sort(np.asarray(samples))
+    return float(s[min(len(s) - 1, int(q / 100.0 * (len(s) - 1) + 0.5))])
+
+
+def run_mode(shared_ds, mesh, *, name: str, tenants: int, rounds: int,
+             k: int, num_keys: int, persist_prefix: bool,
+             batch_window_s: float, private_persists: int,
+             tenant_budget_bytes: int) -> Dict:
+    """One isolated service per mode: fresh executor, compile cache and
+    materialization cache; same dataset and query mix."""
+    METRICS.reset()
+    executor = Executor(plan_cache=PlanCache(),
+                        mat_cache=MaterializationCache())
+    config = ServiceConfig(
+        batch_window_s=batch_window_s,
+        max_queued_per_tenant=max(8, tenants),
+        tenant_device_budget_bytes=tenant_budget_bytes)
+    r: Dict = {"mode": name, "tenants": tenants, "rounds": rounds}
+
+    with QueryService(executor=executor, config=config) as svc:
+        sessions = [svc.session(f"tenant{i}") for i in range(tenants)]
+
+        if persist_prefix:
+            t0 = time.monotonic()
+            sessions[0].mare(shared_ds).map(image="kmer-stats",
+                                            k=k).persist()
+            r["persist_s"] = time.monotonic() - t0
+
+        def query(sess, op, label=None):
+            return (sess.mare(shared_ds)
+                    .map(image="kmer-stats", k=k)
+                    .reduce_by_key(_key_of, value_by=_ones_of, op=op,
+                                   num_keys=num_keys)
+                    .collect(label=label))
+
+        # warmup pays every compile this mode will ever need
+        results = {op: _normalize(query(sessions[0], op, "warmup"))
+                   for op in QUERY_OPS}
+        r["warmup_programs_compiled"] = \
+            executor.plan_cache.stats()["misses"]
+
+        # private-persist churn: each tenant pins its OWN small datasets
+        # under the per-tenant budget — enough of them that the partition
+        # must evict, proving eviction stays within the owner
+        if private_persists:
+            priv_rows = max(64, tenant_budget_bytes // (2 * 8))
+            for i, sess in enumerate(sessions):
+                for j in range(private_persists):
+                    pds = from_host(
+                        {"v": np.full((priv_rows,), i * 131 + j,
+                                      np.int64)}, mesh)
+                    sess.mare(pds).persist()
+
+        before = executor.plan_cache.stats()
+        pre = METRICS.snapshot()
+        barrier = threading.Barrier(tenants)
+        per_tenant: List[List[float]] = [[] for _ in sessions]
+        mode_results: List[Dict] = [dict() for _ in sessions]
+
+        def client(idx: int) -> None:
+            sess = sessions[idx]
+            for rnd in range(rounds):
+                op = QUERY_OPS[rnd % len(QUERY_OPS)]
+                barrier.wait()      # same-key queries fire together
+                t0 = time.monotonic()
+                out = query(sess, op, f"round {rnd}")
+                per_tenant[idx].append(time.monotonic() - t0)
+                mode_results[idx][op] = _normalize(out)
+
+        threads = [threading.Thread(target=client, args=(i,), daemon=True)
+                   for i in range(tenants)]
+        t0 = time.monotonic()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.monotonic() - t0
+        after = executor.plan_cache.stats()
+
+        for idx, res in enumerate(mode_results):
+            for op, norm in res.items():
+                assert norm == results[op], \
+                    f"{name}: tenant{idx} {op!r} result differs"
+
+        flat = [s for lats in per_tenant for s in lats]
+        snap = METRICS.snapshot()
+        # measured window only (warmup/persist dispatches excluded)
+        dispatches = int(snap.get("serve.dispatches", 0)) \
+            - int(pre.get("serve.dispatches", 0))
+        followers = int(snap.get("serve.batched_followers", 0)) \
+            - int(pre.get("serve.batched_followers", 0))
+        mat = executor.mat_cache.stats()
+        r.update({
+            "results": results,
+            "measured_actions": len(flat),
+            "measured_programs_compiled":
+                after["misses"] - before["misses"],
+            "wall_s": wall,
+            "qps": len(flat) / wall,
+            "p50_s": _pct(flat, 50),
+            "p99_s": _pct(flat, 99),
+            "per_tenant_p99_s": [_pct(lats, 99) for lats in per_tenant],
+            "dispatches": dispatches,
+            "mean_batch_occupancy": len(flat) / max(1, dispatches),
+            "batched_followers": followers,
+            "admission_rejected":
+                int(snap.get("serve.admission_rejected", 0)),
+            "mat_cache": mat,
+            "owner_bytes": {
+                str(owner): tiers for owner, tiers
+                in executor.mat_cache.owner_bytes().items()},
+        })
+        assert r["measured_programs_compiled"] == 0, \
+            f"{name}: measured rounds must not recompile"
+        assert mat["tenant_budget_violations"] == 0, \
+            f"{name}: cross-tenant cache-budget violation recorded"
+        for owner, tiers in executor.mat_cache.owner_bytes().items():
+            if owner is None:
+                continue
+            assert tiers["device"] <= tenant_budget_bytes, \
+                (f"{name}: {owner} device footprint {tiers['device']} "
+                 f"exceeds its {tenant_budget_bytes}-byte partition")
+    return r
+
+
+def main() -> Dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true",
+                    help="CI smoke mode: tiny dataset, few rounds")
+    ap.add_argument("--sessions", type=int, default=8,
+                    help="concurrent tenant sessions (acceptance: >= 8)")
+    ap.add_argument("--batch-window", type=float, default=0.025)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+
+    n_reads = 512 if args.small else 4_096
+    k = 3 if args.small else 5
+    rounds = 3 if args.small else 9
+    num_keys = 4 ** k
+    tenants = args.sessions
+
+    mesh = compat.make_mesh((jax.device_count(),), ("data",))
+    shared_ds = MaRe(make_reads(n_reads), mesh=mesh).dataset
+
+    # per-tenant partition: fits 2 private datasets, so the 3rd persist
+    # must evict that tenant's own oldest entry
+    private_persists = 3
+    probe = from_host({"v": np.zeros((max(64, 4096 // (2 * 8)),),
+                                     np.int64)}, mesh)
+    entry_bytes = estimate_nbytes(probe)
+    tenant_budget = int(entry_bytes * 2.5)
+
+    common = dict(tenants=tenants, rounds=rounds, k=k, num_keys=num_keys,
+                  private_persists=private_persists,
+                  tenant_budget_bytes=tenant_budget)
+    single = run_mode(shared_ds, mesh, name="single",
+                      **{**common, "tenants": 1,
+                         "rounds": tenants * rounds},
+                      persist_prefix=True,
+                      batch_window_s=args.batch_window)
+    cold = run_mode(shared_ds, mesh, name="cold", **common,
+                    persist_prefix=False, batch_window_s=0.0)
+    shared = run_mode(shared_ds, mesh, name="shared", **common,
+                      persist_prefix=True,
+                      batch_window_s=args.batch_window)
+
+    # -- cross-mode invariants ----------------------------------------------
+    for op in QUERY_OPS:
+        assert single["results"][op] == cold["results"][op] \
+            == shared["results"][op], f"{op!r}: modes disagree"
+    for mode in (single, cold, shared):
+        mode.pop("results")
+    assert shared["mean_batch_occupancy"] > 1.0, \
+        "shared mode never batched"
+    assert shared["mat_cache"]["shared_hits"] > 0, \
+        "shared mode recorded no cross-tenant prefix hits"
+    assert cold["mat_cache"]["hits"] == 0, \
+        "cold mode must never hit the materialization cache"
+
+    # -- acceptance criteria (latency ratios, same machine, same run) --------
+    p50_ratio = shared["p50_s"] / cold["p50_s"]
+    assert p50_ratio <= 0.6, \
+        (f"shared-prefix p50 {shared['p50_s'] * 1e3:.1f}ms not <= 0.6x "
+         f"cold p50 {cold['p50_s'] * 1e3:.1f}ms (ratio {p50_ratio:.2f})")
+    worst_p99 = max(shared["per_tenant_p99_s"])
+    fair_ratio = worst_p99 / single["p99_s"]
+    assert fair_ratio <= 2.0, \
+        (f"worst per-tenant p99 {worst_p99 * 1e3:.1f}ms not <= 2x "
+         f"single-tenant p99 {single['p99_s'] * 1e3:.1f}ms "
+         f"(ratio {fair_ratio:.2f})")
+
+    out = {
+        "bench": "serve",
+        "devices": jax.device_count(),
+        "concurrent_sessions": tenants,
+        "rounds": rounds,
+        "n_reads": n_reads,
+        "k": k,
+        "num_keys": num_keys,
+        "batch_window_s": args.batch_window,
+        "tenant_budget_bytes": tenant_budget,
+        "private_persists_per_tenant": private_persists,
+        "single": single,
+        "cold": cold,
+        "shared": shared,
+        "p50_shared_over_cold": p50_ratio,
+        "worst_tenant_p99_over_single": fair_ratio,
+        "tenant_budget_violations":
+            shared["mat_cache"]["tenant_budget_violations"],
+    }
+    for mode in (single, cold, shared):
+        print(f"serve,{mode['mode']},"
+              f"actions={mode['measured_actions']},"
+              f"qps={mode['qps']:.2f},"
+              f"p50={mode['p50_s'] * 1e3:.1f}ms,"
+              f"p99={mode['p99_s'] * 1e3:.1f}ms,"
+              f"occupancy={mode['mean_batch_occupancy']:.2f}")
+    print(f"serve,p50_shared/cold={p50_ratio:.3f},"
+          f"fairness_p99/single={fair_ratio:.3f},"
+          f"budget_violations={out['tenant_budget_violations']}")
+
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -64,6 +64,41 @@ def print_cache_table(results) -> None:
               f"| {_fmt(speedup) + 'x' if speedup is not None else '-'} |")
 
 
+def serve_rows(result: dict):
+    """Per-mode latency/QPS columns for the serving benchmark
+    (BENCH_serve.json): one row per load mode, plus the coalescing and
+    isolation numbers the bench asserts on."""
+    for mode in ("single", "cold", "shared"):
+        sub = result.get(mode)
+        if not isinstance(sub, dict) or "p50_s" not in sub:
+            continue
+        yield (mode, sub.get("tenants"), sub.get("qps"),
+               sub["p50_s"] * 1e3, sub.get("p99_s", 0.0) * 1e3,
+               sub.get("mean_batch_occupancy"),
+               sub.get("mat_cache", {}).get("shared_hits"))
+
+
+def print_serve_table(results) -> None:
+    for name, result in results:
+        rows = list(serve_rows(result))
+        if not rows:
+            continue
+        print(f"\n### Multi-tenant serving ({name})\n")
+        print("| mode | tenants | qps | p50 (ms) | p99 (ms) "
+              "| batch occupancy | shared hits |")
+        print("| --- | --- | --- | --- | --- | --- | --- |")
+        for mode, tenants, qps, p50, p99, occ, shared in rows:
+            print(f"| {mode} | {tenants} | {_fmt(qps)} | {_fmt(p50)} "
+                  f"| {_fmt(p99)} | {_fmt(occ)} | {_fmt(shared)} |")
+        ratio = result.get("p50_shared_over_cold")
+        fair = result.get("worst_tenant_p99_over_single")
+        if ratio is not None and fair is not None:
+            print(f"\n{name}: shared-prefix p50 = **{_fmt(ratio)}x** cold "
+                  f"(guard: <= 0.6), worst-tenant p99 = **{_fmt(fair)}x** "
+                  f"single-tenant (guard: <= 2.0), budget violations = "
+                  f"{result.get('tenant_budget_violations')}")
+
+
 def phase_rows(name: str, result: dict):
     """Per-phase wall breakdowns: any nested dict field whose name
     mentions 'phase' maps phase -> seconds (e.g. kmer's ``phases_cold``
@@ -142,6 +177,7 @@ def main() -> int:
         for key, value in rows_for(result):
             print(f"| {key} | {value} |")
     print_cache_table(results)
+    print_serve_table(results)
     print_tuning_table(results)
     print_phase_table(results)
     return 0

@@ -9,7 +9,7 @@ each sequence record to packed 2-bit k-mer keys, and
 ``MaRe.reduce_by_key`` folds equal keys with a map-side combiner — the
 whole chain compiles to ONE shard_map program, and shuffle volume scales
 with distinct k-mers, not k-mer occurrences (see
-``last_diagnostics["stage1.exchanged_records"]``).
+``report().diagnostics["stage1.exchanged_records"]``).
 
 Note the FASTA reader frames each sequence *line* as one record, so
 k-mers spanning a line boundary are not counted — the reference below
@@ -99,7 +99,7 @@ def main():
     print(f"{len(got)} distinct {K}-mers over {sum(got.values())} windows")
     for key, cnt in top:
         print(f"  {decode(key)}  x{cnt}")
-    diag = stats.last_diagnostics
+    diag = stats.report().diagnostics
     print(f"combiner exchange volume: {diag['stage1.exchanged_records']} "
           f"records (vs {sum(got.values())} k-mer occurrences)")
 
@@ -112,7 +112,7 @@ def main():
                 .reduce_by_key(key_of, value_by=ones_of, op="max"))
     assert "[cached]" in followup.describe()
     followup.collect()
-    report = followup.reports.latest
+    report = followup.report()
     assert report.cached_stages == 1
     print(f"persisted prefix reused: cached {report.cached_stages}/"
           f"{report.total_stages} stages from {report.cache_tier} tier")

@@ -39,13 +39,13 @@ def main():
 
     gc_count = (
         MaRe.from_source(fasta_source(fasta, split_bytes=1 << 14)).map(
-            inputMountPoint=TextFile("/dna"),
-            outputMountPoint=TextFile("/count"),
+            input_mount=TextFile("/dna"),
+            output_mount=TextFile("/count"),
             image="ubuntu",
             command="grep-chars GC",
         ).reduce(
-            inputMountPoint=TextFile("/counts"),
-            outputMountPoint=TextFile("/sum"),
+            input_mount=TextFile("/counts"),
+            output_mount=TextFile("/sum"),
             image="ubuntu",
             command="awk-sum",
         ))
@@ -54,7 +54,7 @@ def main():
     # the pending stage DAG that the planner will fuse into ONE program.
     print(gc_count.describe())
 
-    (total,) = gc_count.collect_first_shard()
+    (total,) = gc_count.collect(shard=0)
     expected = seq.count("G") + seq.count("C")
     print(f"GC count: {int(total[0])} (expected {expected})")
     assert int(total[0]) == expected
@@ -64,17 +64,17 @@ def main():
     before = DEFAULT_CACHE.stats()
     rerun = (
         MaRe.from_source(fasta_source(fasta, split_bytes=1 << 14)).map(
-            inputMountPoint=TextFile("/dna"),
-            outputMountPoint=TextFile("/count"),
+            input_mount=TextFile("/dna"),
+            output_mount=TextFile("/count"),
             image="ubuntu",
             command="grep-chars GC",
         ).reduce(
-            inputMountPoint=TextFile("/counts"),
-            outputMountPoint=TextFile("/sum"),
+            input_mount=TextFile("/counts"),
+            output_mount=TextFile("/sum"),
             image="ubuntu",
             command="awk-sum",
         ))
-    (total2,) = rerun.collect_first_shard()
+    (total2,) = rerun.collect(shard=0)
     after = DEFAULT_CACHE.stats()
     assert int(total2[0]) == expected
     assert after["misses"] == before["misses"], "re-run must not recompile"

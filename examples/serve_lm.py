@@ -10,6 +10,6 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.launch.serve import main as serve_main
 
 if __name__ == "__main__":
-    sys.exit(serve_main(["--arch", "llama3.2-1b", "--smoke",
-                         "--batch", "4", "--prompt-len", "32",
+    sys.exit(serve_main(["--model-smoke", "--arch", "llama3.2-1b",
+                         "--smoke", "--batch", "4", "--prompt-len", "32",
                          "--gen", "16"]))

@@ -139,21 +139,30 @@ def from_shard_arrays(shard_records: Any, shard_counts: Sequence[int],
                           axis=axis)
 
 
-def collect_first_shard(ds: ShardedDataset) -> Any:
-    """Shard 0's valid records (for reduced/replicated results).
+def collect_shard(ds: ShardedDataset, shard: int = 0) -> Any:
+    """One shard's valid records (``MaRe.collect(shard=...)``'s engine).
 
-    Slices shard 0 on device and transfers only its valid rows to host —
-    a replicated reduce result would otherwise ship every shard's full
-    copy across just to keep the first.
+    Slices the shard's block on device and transfers only its valid rows
+    to host — a replicated reduce result would otherwise ship every
+    shard's full copy across just to keep one.
     """
     n = ds.num_shards
-    rows = int(jax.device_get(ds.counts)[0])
+    if not 0 <= shard < n:
+        raise ValueError(f"shard index {shard} out of range for "
+                         f"{n}-shard dataset")
+    rows = int(jax.device_get(ds.counts)[shard])
 
-    def first(leaf):
-        cap = leaf.shape[0] // n  # per-leaf shard-0 block
-        return jax.device_get(leaf[:min(cap, rows)])
+    def one(leaf):
+        cap = leaf.shape[0] // n  # per-leaf shard block
+        lo = shard * cap
+        return jax.device_get(leaf[lo:lo + min(cap, rows)])
 
-    return jax.tree.map(first, ds.records)
+    return jax.tree.map(one, ds.records)
+
+
+def collect_first_shard(ds: ShardedDataset) -> Any:
+    """Shard 0's valid records (for reduced/replicated results)."""
+    return collect_shard(ds, 0)
 
 
 def collect(ds: ShardedDataset) -> Any:

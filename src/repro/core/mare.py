@@ -19,18 +19,29 @@ passed to the image factory (images interpret their own command grammar,
 like a container ENTRYPOINT).
 
 All primitives are **lazy**: they append stages to a logical plan.  MaRe
-itself is a thin facade — an action (``collect`` / ``collect_async`` /
-``collect_first_shard`` / ``persist`` / ``dataset``) hands the chain to
-the runtime layer (:mod:`repro.runtime`): the planner lowers it into a
-single memoized ``shard_map`` program, and the executor dispatches it,
-reusing any plan *prefix* previously materialized with :meth:`MaRe.
-persist` (lineage-keyed cache), syncing stage counters once, and
-appending an :class:`~repro.runtime.reports.ActionReport` to the shared
-per-chain history (``reports`` / ``last_diagnostics``).
+itself is a thin facade — an action (``collect`` / ``persist`` /
+``dataset``) hands the chain to the runtime layer
+(:mod:`repro.runtime`): the planner lowers it into a single memoized
+``shard_map`` program, and the executor dispatches it, reusing any plan
+*prefix* previously materialized with :meth:`MaRe.persist`
+(lineage-keyed cache), syncing stage counters once, and appending an
+:class:`~repro.runtime.reports.ActionReport` to the shared per-chain
+history (:meth:`MaRe.report` / :meth:`MaRe.reports`).
+
+There is ONE action signature: ``collect(shard=..., asynchronous=...,
+label=...)``.  The former variants (``collect_async``,
+``collect_first_shard``, ``collect_first_shard_async``) and the
+``last_diagnostics`` dict survive as deprecated shims, as do the
+paper-spelling camelCase aliases (``repartitionBy``, ``reduceByKey``,
+``inputMountPoint=`` / ``outputMountPoint=``) — all centralized in
+:data:`PAPER_METHOD_ALIASES` / :data:`PAPER_KWARG_ALIASES` and applied
+by the :func:`paper_aliases` class decorator, each warning once per
+process (:mod:`repro.deprecations`).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional, TYPE_CHECKING
+import functools
+from typing import Any, Callable, Dict, Optional, TYPE_CHECKING
 
 import jax
 from jax.sharding import Mesh
@@ -44,10 +55,91 @@ from repro.core.mounts import Mount
 from repro.core.plan import (KEYED_MONOIDS, Plan, StageState, infer_stage,
                              infer_states)
 from repro.core.schema import schema_of_records
+from repro.deprecations import warn_once
 
 if TYPE_CHECKING:  # runtime imported lazily: core must not require
     from repro.runtime.executor import ActionHandle, Executor  # noqa: F401
-    from repro.runtime.reports import ReportLog  # noqa: F401
+    from repro.runtime.reports import ActionReport, ReportLog  # noqa: F401
+
+
+#: Deprecated camelCase method -> canonical snake_case method, applied to
+#: MaRe by :func:`paper_aliases` (the ONE place paper spellings live).
+PAPER_METHOD_ALIASES: Dict[str, str] = {
+    "repartitionBy": "repartition_by",
+    "reduceByKey": "reduce_by_key",
+}
+
+#: Deprecated camelCase kwarg -> canonical kwarg, translated on the
+#: methods listed in :data:`PAPER_KWARG_METHODS`.
+PAPER_KWARG_ALIASES: Dict[str, str] = {
+    "inputMountPoint": "input_mount",
+    "outputMountPoint": "output_mount",
+}
+
+#: Methods whose kwargs go through the alias table.
+PAPER_KWARG_METHODS = ("map", "reduce")
+
+
+def _alias_method(camel: str, snake: str) -> Callable:
+    def shim(self, *args: Any, **kwargs: Any):
+        warn_once(("method", camel),
+                  f"MaRe.{camel}() is deprecated; use MaRe.{snake}() "
+                  f"(paper-spelling alias, forwarded unchanged)")
+        return getattr(self, snake)(*args, **kwargs)
+
+    shim.__name__ = camel
+    shim.__qualname__ = f"MaRe.{camel}"
+    shim.__doc__ = (f"Deprecated paper spelling of :meth:`{snake}` "
+                    f"(warns once, forwards everything).")
+    return shim
+
+
+def _translate_kwargs(fn: Callable) -> Callable:
+    @functools.wraps(fn)
+    def wrapper(self, *args: Any, **kwargs: Any):
+        for camel, snake in PAPER_KWARG_ALIASES.items():
+            if camel in kwargs:
+                if kwargs.get(snake) is not None:
+                    raise TypeError(
+                        f"{fn.__name__}() got both {snake!r} and its "
+                        f"deprecated alias {camel!r}")
+                warn_once(("kwarg", camel),
+                          f"{camel}= is deprecated; use {snake}= "
+                          f"(paper-spelling kwarg alias)")
+                kwargs[snake] = kwargs.pop(camel)
+        return fn(self, *args, **kwargs)
+
+    return wrapper
+
+
+def paper_aliases(cls):
+    """Class decorator installing every paper-spelling alias from the
+    tables above — ad-hoc per-method aliasing is not allowed; add new
+    spellings to the tables instead."""
+    for camel, snake in PAPER_METHOD_ALIASES.items():
+        setattr(cls, camel, _alias_method(camel, snake))
+    for name in PAPER_KWARG_METHODS:
+        setattr(cls, name, _translate_kwargs(getattr(cls, name)))
+    return cls
+
+
+#: Per-shard finalizer cache: ``collect(shard=i)`` must hand the runtime
+#: the SAME callable object for a given ``i`` every time — finalize
+#: identity is part of the cross-session batch key, so two sessions
+#: asking for shard 0 of the same lineage coalesce into one dispatch.
+_SHARD_FINALIZERS: Dict[int, Callable] = {}
+
+
+def _finalizer(shard: Optional[int]) -> Callable:
+    """The dataset->host callable for ``collect(shard=...)``: whole-dataset
+    gather when ``shard`` is None, else a cached per-shard slicer."""
+    if shard is None:
+        return ds_lib.collect
+    fn = _SHARD_FINALIZERS.get(shard)
+    if fn is None:
+        fn = _SHARD_FINALIZERS[shard] = functools.partial(
+            ds_lib.collect_shard, shard=shard)
+    return fn
 
 
 def _resolve_monoid(image: str, command: str, registry: Registry) -> str:
@@ -79,6 +171,7 @@ def _resolve_op(image: Optional[str], op: Optional[ContainerOp],
     return op
 
 
+@paper_aliases
 class MaRe:
     """Driver handle over a :class:`ShardedDataset` with a lazy stage plan.
 
@@ -112,10 +205,10 @@ class MaRe:
         self.plan_cache = plan_cache
         self.fuse = fuse
         self.executor = executor if executor is not None else DEFAULT_EXECUTOR
-        #: Per-chain action history (shared across handles forked from this
-        #: one): every action appends an ActionReport here AND to the
-        #: executor's global history.
-        self.reports = _reports if _reports is not None else ReportLog()
+        # Per-chain action history (shared across handles forked from this
+        # one): every action appends an ActionReport here AND to the
+        # executor's global history.  Surfaced via report()/reports().
+        self._report_log = _reports if _reports is not None else ReportLog()
         #: Inferred StageState per stage boundary (build-time type check);
         #: computed in _chain, reset when the plan materializes.
         self._states: Optional[list] = None
@@ -137,12 +230,30 @@ class MaRe:
                     width=width, workers=workers)
         return cls(ds, registry=registry, executor=executor)
 
+    # -- reports -------------------------------------------------------------
+
+    def report(self) -> Optional["ActionReport"]:
+        """The NEWEST :class:`~repro.runtime.reports.ActionReport` on this
+        chain (None before the first action).  ``report().diagnostics``
+        is the per-stage counter dict; ``report().phases`` the wall
+        breakdown."""
+        return self._report_log.latest
+
+    def reports(self) -> "ReportLog":
+        """The chain's full action history (shared across forked handles):
+        a :class:`~repro.runtime.reports.ReportLog` — iterate, index,
+        ``total(counter)``, ``summary()``."""
+        return self._report_log
+
     @property
     def last_diagnostics(self) -> dict:
-        """Counter totals of the NEWEST action on this chain (back-compat
-        view over ``reports`` — chaining no longer loses history)."""
-        latest = self.reports.latest
-        return latest.counters if latest is not None else {}
+        """Deprecated: counter totals of the newest action.  Use
+        ``report().diagnostics`` (and ``reports()`` for history)."""
+        warn_once(("property", "last_diagnostics"),
+                  "MaRe.last_diagnostics is deprecated; use "
+                  "MaRe.report().diagnostics (reports() for history)")
+        latest = self.report()
+        return latest.diagnostics if latest is not None else {}
 
     def _initial_state(self) -> StageState:
         ds = self._dataset
@@ -159,7 +270,7 @@ class MaRe:
     def _chain(self, plan: Plan) -> "MaRe":
         m = MaRe(self._dataset, registry=self.registry, _plan=plan,
                  plan_cache=self.plan_cache, fuse=self.fuse,
-                 executor=self.executor, _reports=self.reports)
+                 executor=self.executor, _reports=self._report_log)
         # type-check at BUILD time, incrementally: every primitive either
         # appends one stage or extends the trailing MapStage, so the
         # parent's inferred states are a valid prefix up to the new plan's
@@ -171,14 +282,15 @@ class MaRe:
                                           last)]
         return m
 
-    def _materialize(self) -> ShardedDataset:
+    def _materialize(self, label: Optional[str] = None) -> ShardedDataset:
         """Run all pending stages through the runtime executor: one fused
         program for the suffix not already materialized in the lineage
         cache, one counter sync, one appended ActionReport."""
         if not self.plan.empty:
             self._dataset, _ = self.executor.run(
                 self._dataset, self.plan, fuse=self.fuse,
-                plan_cache=self.plan_cache, reports=self.reports)
+                plan_cache=self.plan_cache, reports=self._report_log,
+                label=label)
             self.plan = Plan()
             self._states = None
         else:
@@ -195,25 +307,21 @@ class MaRe:
     def map(self, *, image: Optional[str] = None,
             op: Optional[ContainerOp] = None,
             command: str = "",
-            inputMountPoint: Optional[Mount] = None,
-            outputMountPoint: Optional[Mount] = None,
             input_mount: Optional[Mount] = None,
             output_mount: Optional[Mount] = None,
             **params: Any) -> "MaRe":
         """Apply a container to each partition (lazy; fused into one stage).
 
-        Accepts both paper spelling (``inputMountPoint``) and snake_case.
+        The paper spelling (``inputMountPoint=`` / ``outputMountPoint=``)
+        is accepted as a deprecated alias via :func:`paper_aliases`.
         """
         op = _resolve_op(image, op, command, self.registry,
-                         input_mount or inputMountPoint,
-                         output_mount or outputMountPoint, **params)
+                         input_mount, output_mount, **params)
         return self._chain(self.plan.then(op))
 
     def reduce(self, *, image: Optional[str] = None,
                op: Optional[ContainerOp] = None,
                command: str = "",
-               inputMountPoint: Optional[Mount] = None,
-               outputMountPoint: Optional[Mount] = None,
                input_mount: Optional[Mount] = None,
                output_mount: Optional[Mount] = None,
                depth: int = 2,
@@ -225,8 +333,7 @@ class MaRe:
         program at action time.  The result is replicated on every shard
         (single-partition RDD')."""
         op = _resolve_op(image, op, command, self.registry,
-                         input_mount or inputMountPoint,
-                         output_mount or outputMountPoint, **params)
+                         input_mount, output_mount, **params)
         if not op.associative_commutative:
             raise ValueError(
                 f"reduce combiner {op.name} is not marked associative+"
@@ -296,7 +403,7 @@ class MaRe:
         each key's records over S consecutive shards and re-exchanges
         per-key partials in a second hop, shrinking buffers by ~S/2 on
         hot-key data (docs/architecture.md §keyed exchange).  After any
-        action, ``last_diagnostics['stage<i>.max_send_count']`` is the
+        action, ``report().diagnostics['stage<i>.max_send_count']`` is the
         tightest lossless ``capacity=`` observed — the feedback knob if
         the salted heuristic capacity ever overflows.  ``salt`` with
         ``combiner=True`` is rejected: the combiner already bounds the
@@ -327,10 +434,6 @@ class MaRe:
             combiner=combiner, capacity=capacity, use_kernel=use_kernel,
             salt=salt))
 
-    # Paper spelling aliases
-    repartitionBy = repartition_by
-    reduceByKey = reduce_by_key
-
     # -- actions ------------------------------------------------------------
 
     def persist(self, tier: str = "device") -> "MaRe":
@@ -351,7 +454,7 @@ class MaRe:
         self.executor.persist(ds, tier=tier)
         return MaRe(ds, registry=self.registry, plan_cache=self.plan_cache,
                     fuse=self.fuse, executor=self.executor,
-                    _reports=self.reports)
+                    _reports=self._report_log)
 
     def cache(self) -> "MaRe":
         """Sugar for :meth:`persist` (``tier="device"``).
@@ -362,37 +465,67 @@ class MaRe:
         """
         return self.persist(tier="device")
 
-    def collect(self) -> Any:
-        """Run pending stages and gather valid records to host."""
-        return ds_lib.collect(self._materialize())
+    def collect(self, *, shard: Optional[int] = None,
+                asynchronous: bool = False,
+                label: Optional[str] = None) -> Any:
+        """THE action: run pending stages and gather valid records to host.
+
+        ``shard=None`` gathers every shard's valid records
+        (``RDD.collect``); ``shard=i`` slices one shard's block on device
+        and ships only its valid rows — the right call for reduced
+        (replicated) results, where ``shard=0`` replaces the old
+        ``collect_first_shard``.
+
+        ``asynchronous=False`` (default) blocks and returns host arrays.
+        ``asynchronous=True`` dispatches on the executor's action thread
+        behind its bounded queue and returns an
+        :class:`~repro.runtime.executor.ActionHandle` (``.result()``
+        blocks, ``.report`` carries the ActionReport).  Snapshot
+        semantics: the handle's pending plan is captured at call time and
+        this handle is left lazy (a later sync action on it re-resolves
+        against the materialization cache — persist first if the prefix
+        should be shared).
+
+        ``label`` tags the action's report either way (e.g. ``"wave 3"``
+        on the wave path, query names in interactive sessions).
+        """
+        if shard is not None and not (0 <= shard
+                                      < self._dataset.num_shards):
+            raise ValueError(
+                f"shard index {shard} out of range for "
+                f"{self._dataset.num_shards}-shard dataset")
+        finalize = _finalizer(shard)
+        if not asynchronous:
+            return finalize(self._materialize(label=label))
+        return self.executor.submit_action(
+            self._dataset, self.plan, finalize=finalize,
+            fuse=self.fuse, plan_cache=self.plan_cache,
+            reports=self._report_log, label=label)
+
+    # -- deprecated action shims (one collect() signature replaces them) -----
 
     def collect_async(self, label: Optional[str] = None) -> ActionHandle:
-        """Async ``collect``: dispatch on the executor's action thread
-        behind its bounded queue and return an :class:`ActionHandle`
-        (``.result()`` blocks, ``.report`` carries the ActionReport).
-
-        Snapshot semantics: the handle's pending plan is captured at call
-        time and this handle is left lazy (a later sync action on it
-        re-resolves against the materialization cache — persist first if
-        the prefix should be shared)."""
-        return self.executor.submit_action(
-            self._dataset, self.plan, finalize=ds_lib.collect,
-            fuse=self.fuse, plan_cache=self.plan_cache,
-            reports=self.reports, label=label)
+        """Deprecated: use ``collect(asynchronous=True)``."""
+        warn_once(("method", "collect_async"),
+                  "MaRe.collect_async(label=...) is deprecated; use "
+                  "MaRe.collect(asynchronous=True, label=...)")
+        return self.collect(asynchronous=True, label=label)
 
     def collect_first_shard(self) -> Any:
-        """For reduced (replicated) results: shard 0's valid records
-        (sliced on device — only shard 0's valid rows cross to host)."""
-        return ds_lib.collect_first_shard(self._materialize())
+        """Deprecated: use ``collect(shard=0)``."""
+        warn_once(("method", "collect_first_shard"),
+                  "MaRe.collect_first_shard() is deprecated; use "
+                  "MaRe.collect(shard=0)")
+        return self.collect(shard=0)
 
     def collect_first_shard_async(self, label: Optional[str] = None
                                   ) -> ActionHandle:
-        """Async :meth:`collect_first_shard` (same snapshot semantics as
-        :meth:`collect_async`) — the wave runner's per-wave action."""
-        return self.executor.submit_action(
-            self._dataset, self.plan, finalize=ds_lib.collect_first_shard,
-            fuse=self.fuse, plan_cache=self.plan_cache,
-            reports=self.reports, label=label)
+        """Deprecated: use ``collect(shard=0, asynchronous=True)``."""
+        warn_once(("method", "collect_first_shard_async"),
+                  "MaRe.collect_first_shard_async(label=...) is "
+                  "deprecated; use MaRe.collect(shard=0, "
+                  "asynchronous=True, label=...)")
+        return self.collect(shard=0, asynchronous=True, label=label)
 
     def num_partitions(self) -> int:
         return self._dataset.num_shards

@@ -137,9 +137,8 @@ class WaveRunner:
         flight) and return its ActionHandle."""
         m = self._pipeline(ds)
         label = f"wave {idx}"
-        if self._reduce is not None:
-            return m.collect_first_shard_async(label=label)
-        return m.collect_async(label=label)
+        shard = 0 if self._reduce is not None else None
+        return m.collect(shard=shard, asynchronous=True, label=label)
 
     def _ingest_wave(self, wave: Sequence[InputSplit],
                      idx: Optional[int] = None):
@@ -238,6 +237,6 @@ class WaveRunner:
                     registry=self.registry, plan_cache=self.plan_cache,
                     executor=self.executor,
                     _reports=self.reports).reduce(**self._reduce)
-        out = fold.collect_first_shard()
+        out = fold.collect(shard=0)
         snap_stats()
         return out

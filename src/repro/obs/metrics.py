@@ -43,14 +43,23 @@ class Counter:
 class Gauge:
     """Last-set value (e.g. current dispatch-queue depth)."""
 
-    __slots__ = ("name", "_value")
+    __slots__ = ("name", "_value", "_lock")
 
     def __init__(self, name: str) -> None:
         self.name = name
         self._value: Number = 0
+        self._lock = threading.Lock()
 
     def set(self, v: Number) -> None:
         self._value = v
+
+    def add(self, delta: Number) -> Number:
+        """Atomic increment/decrement (per-tenant queue depths are
+        maintained by +1 on enqueue / -1 on dequeue from different
+        threads); returns the new value."""
+        with self._lock:
+            self._value += delta
+            return self._value
 
     @property
     def value(self) -> Number:
@@ -92,6 +101,25 @@ class Histogram:
     @property
     def mean(self) -> float:
         return self.total / self.count if self.count else 0.0
+
+    def percentile(self, q: float) -> float:
+        """Bucket-resolution percentile estimate (``q`` in [0, 100]):
+        the upper edge of the bucket holding the q-th observation.
+        Power-of-two buckets make this a factor-of-2 estimate — good
+        enough for the serving loop's live p50/p99 display; exact
+        percentiles come from the benchmark's raw sample lists."""
+        if not self.count:
+            return 0.0
+        rank = max(1, math.ceil(self.count * min(max(q, 0.0), 100.0)
+                                / 100.0))
+        with self._lock:
+            seen = 0
+            for i, n in enumerate(self.buckets):
+                seen += n
+                if seen >= rank:
+                    return (_BUCKET_EDGES[i] if i < len(_BUCKET_EDGES)
+                            else self.max)
+        return self.max
 
     def summary(self) -> Dict[str, float]:
         return {"count": self.count, "total": self.total,

@@ -16,11 +16,11 @@ from repro.runtime.cache import (DEVICE_BUDGET_DEFAULT, HOST_BUDGET_DEFAULT,
 from repro.runtime.executor import (DEFAULT_EXECUTOR, ActionHandle,
                                     Executor, check_counters, execute)
 from repro.runtime.lineage import Lineage, host_root, source_root
-from repro.runtime.reports import ActionReport, ReportLog
+from repro.runtime.reports import ActionReport, ReportLog, ReportStream
 
 __all__ = [
     "ActionHandle", "ActionReport", "CacheEntry", "DEFAULT_EXECUTOR",
     "DEVICE_BUDGET_DEFAULT", "Executor", "HOST_BUDGET_DEFAULT", "Lineage",
-    "MaterializationCache", "ReportLog", "check_counters",
+    "MaterializationCache", "ReportLog", "ReportStream", "check_counters",
     "estimate_nbytes", "execute", "host_root", "source_root",
 ]

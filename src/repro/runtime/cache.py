@@ -19,6 +19,17 @@ needed), and each tier is a byte-budgeted LRU:
 * ``host`` — entries hold numpy copies plus the mesh geometry needed to
   re-``device_put`` them on a hit; evicting drops the entry (it can
   always be recomputed from lineage).
+
+Multi-tenant partitions (the serving layer): entries carry an ``owner``
+tag and, when per-tenant budgets are configured, each owner's resident
+bytes are bounded *independently* of everyone else's — one tenant
+persisting past its partition evicts ITS OWN least-recent entries
+(device spills to host, host drops), never a neighbor's.  Lookups stay
+shared and read-only: any tenant whose plan prefix reaches a cached
+lineage node hits it regardless of who paid for it (counted as
+``shared_hits`` when owner and reader differ) — common prefixes over a
+shared persisted dataset are paid once, which is the whole point of the
+interactive service.
 """
 from __future__ import annotations
 
@@ -64,6 +75,8 @@ class CacheEntry:
     host_counts: Optional[np.ndarray] = None
     mesh: Any = None
     axis: str = "data"
+    #: Tenant charged for this entry's bytes (None = unowned/shared pool).
+    owner: Optional[str] = None
 
 
 #: Default per-tier budgets: every ``persist()``/``cache()`` pins its
@@ -87,10 +100,18 @@ class MaterializationCache:
 
     def __init__(self,
                  device_budget_bytes: Optional[int] = DEVICE_BUDGET_DEFAULT,
-                 host_budget_bytes: Optional[int] = HOST_BUDGET_DEFAULT
+                 host_budget_bytes: Optional[int] = HOST_BUDGET_DEFAULT,
+                 tenant_device_budget_bytes: Optional[int] = None,
+                 tenant_host_budget_bytes: Optional[int] = None
                  ) -> None:
         self.device_budget_bytes = device_budget_bytes
         self.host_budget_bytes = host_budget_bytes
+        #: Per-OWNER partition bounds (None = partitions unbounded; the
+        #: global budgets still apply).  Enforced against each owner's
+        #: charged bytes independently: an over-budget owner only ever
+        #: evicts its own entries.
+        self.tenant_device_budget_bytes = tenant_device_budget_bytes
+        self.tenant_host_budget_bytes = tenant_host_budget_bytes
         self._entries: "OrderedDict[Lineage, CacheEntry]" = OrderedDict()
         # persist() runs on the caller's thread while async actions hit
         # the store from the executor's dispatch thread — every public
@@ -98,10 +119,15 @@ class MaterializationCache:
         self._lock = threading.RLock()
         self.hits = 0
         self.host_hits = 0
+        self.shared_hits = 0      # reader != owner on an owned entry
         self.misses = 0
         self.puts = 0
         self.spills = 0
         self.drops = 0
+        #: Count of enforcement passes that left some owner partition
+        #: over its budget (impossible by construction — the serve
+        #: benchmark asserts it stays 0).
+        self.tenant_budget_violations = 0
 
     # -- accounting ----------------------------------------------------------
 
@@ -109,10 +135,23 @@ class MaterializationCache:
         with self._lock:
             return len(self._entries)
 
-    def tier_bytes(self, tier: str) -> int:
+    def tier_bytes(self, tier: str, owner: Any = Ellipsis) -> int:
+        """Resident estimated bytes in ``tier`` (``owner=`` filters to one
+        owner's charged entries; the default counts everyone's)."""
         with self._lock:
             return sum(e.nbytes for e in self._entries.values()
-                       if e.tier == tier)
+                       if e.tier == tier
+                       and (owner is Ellipsis or e.owner == owner))
+
+    def owner_bytes(self) -> Dict[Optional[str], Dict[str, int]]:
+        """Per-owner charged bytes by tier — the serve benchmark's
+        cross-tenant budget-violation check reads this."""
+        with self._lock:
+            out: Dict[Optional[str], Dict[str, int]] = {}
+            for e in self._entries.values():
+                per = out.setdefault(e.owner, {t: 0 for t in TIERS})
+                per[e.tier] += e.nbytes
+            return out
 
     def entry(self, lineage: Lineage) -> Optional[CacheEntry]:
         """Peek without touching recency or stats (describe/tests)."""
@@ -125,8 +164,11 @@ class MaterializationCache:
                     "device_bytes": self.tier_bytes("device"),
                     "host_bytes": self.tier_bytes("host"),
                     "hits": self.hits, "host_hits": self.host_hits,
+                    "shared_hits": self.shared_hits,
                     "misses": self.misses, "puts": self.puts,
-                    "spills": self.spills, "drops": self.drops}
+                    "spills": self.spills, "drops": self.drops,
+                    "tenant_budget_violations":
+                        self.tenant_budget_violations}
 
     def clear(self) -> None:
         with self._lock:
@@ -134,10 +176,14 @@ class MaterializationCache:
 
     # -- put / eviction ------------------------------------------------------
 
-    def put(self, ds: ShardedDataset, tier: str = "device") -> CacheEntry:
+    def put(self, ds: ShardedDataset, tier: str = "device",
+            owner: Optional[str] = None) -> CacheEntry:
         """Register a materialized dataset under its lineage (idempotent
         per lineage: a re-persist refreshes recency, and promotes a
-        host-tier entry when asked for device residency)."""
+        host-tier entry when asked for device residency).  ``owner``
+        charges the entry's bytes to that tenant's budget partition;
+        a re-persist of an existing lineage keeps the original owner —
+        first payer wins, later tenants share read-only."""
         if tier not in TIERS:
             raise ValueError(f"unknown persist tier {tier!r}; "
                              f"expected one of {TIERS}")
@@ -151,7 +197,9 @@ class MaterializationCache:
                 return existing
             entry = CacheEntry(lineage=ds.lineage, tier=tier,
                                nbytes=estimate_nbytes(ds),
-                               mesh=ds.mesh, axis=ds.axis)
+                               mesh=ds.mesh, axis=ds.axis,
+                               owner=existing.owner if existing is not None
+                               else owner)
             if tier == "device":
                 entry.dataset = ds
             else:
@@ -173,39 +221,85 @@ class MaterializationCache:
         entry.dataset = None
         entry.tier = "host"
 
+    def _spill_lru(self, owner: Any = Ellipsis) -> bool:
+        """Spill the least-recent device entry (of ``owner``, when given)
+        to the host tier; False when that tier has no candidate."""
+        victim = next((e for e in self._entries.values()
+                       if e.tier == "device"
+                       and (owner is Ellipsis or e.owner == owner)), None)
+        if victim is None:
+            return False
+        with span("cache.spill", nbytes=victim.nbytes,
+                  lineage=victim.lineage.digest()):
+            self._to_host(victim, victim.dataset)
+        self.spills += 1
+        METRICS.counter("mat_cache.device.evictions").inc()
+        return True
+
+    def _drop_lru(self, owner: Any = Ellipsis) -> bool:
+        """Drop the least-recent host entry (of ``owner``, when given)."""
+        victim_key = next((k for k, e in self._entries.items()
+                           if e.tier == "host"
+                           and (owner is Ellipsis or e.owner == owner)),
+                          None)
+        if victim_key is None:
+            return False
+        instant("cache.drop", nbytes=self._entries[victim_key].nbytes,
+                lineage=victim_key.digest())
+        del self._entries[victim_key]
+        self.drops += 1
+        METRICS.counter("mat_cache.host.evictions").inc()
+        return True
+
     def _enforce_budgets(self) -> None:
+        # per-owner partitions first: an over-budget owner evicts within
+        # its OWN entries, so one tenant's persist pressure can never
+        # push a neighbor's materializations out
+        if self.tenant_device_budget_bytes is not None or \
+                self.tenant_host_budget_bytes is not None:
+            owners = {e.owner for e in self._entries.values()
+                      if e.owner is not None}
+            for owner in owners:
+                if self.tenant_device_budget_bytes is not None:
+                    while (self.tier_bytes("device", owner)
+                           > self.tenant_device_budget_bytes):
+                        if not self._spill_lru(owner):
+                            break
+                if self.tenant_host_budget_bytes is not None:
+                    while (self.tier_bytes("host", owner)
+                           > self.tenant_host_budget_bytes):
+                        if not self._drop_lru(owner):
+                            break
+                over = ((self.tenant_device_budget_bytes is not None
+                         and self.tier_bytes("device", owner)
+                         > self.tenant_device_budget_bytes)
+                        or (self.tenant_host_budget_bytes is not None
+                            and self.tier_bytes("host", owner)
+                            > self.tenant_host_budget_bytes))
+                if over:
+                    self.tenant_budget_violations += 1
+                    METRICS.counter(
+                        "mat_cache.tenant_budget_violations").inc()
         # device -> host spill, LRU first
         if self.device_budget_bytes is not None:
             while self.tier_bytes("device") > self.device_budget_bytes:
-                victim = next((e for e in self._entries.values()
-                               if e.tier == "device"), None)
-                if victim is None:
+                if not self._spill_lru():
                     break
-                with span("cache.spill", nbytes=victim.nbytes,
-                          lineage=victim.lineage.digest()):
-                    self._to_host(victim, victim.dataset)
-                self.spills += 1
-                METRICS.counter("mat_cache.device.evictions").inc()
         # host drop, LRU first
         if self.host_budget_bytes is not None:
             while self.tier_bytes("host") > self.host_budget_bytes:
-                victim_key = next((k for k, e in self._entries.items()
-                                   if e.tier == "host"), None)
-                if victim_key is None:
+                if not self._drop_lru():
                     break
-                instant("cache.drop",
-                        nbytes=self._entries[victim_key].nbytes,
-                        lineage=victim_key.digest())
-                del self._entries[victim_key]
-                self.drops += 1
-                METRICS.counter("mat_cache.host.evictions").inc()
 
     # -- lookup --------------------------------------------------------------
 
-    def get(self, lineage: Lineage) -> Optional[ShardedDataset]:
+    def get(self, lineage: Lineage, tenant: Optional[str] = None
+            ) -> Optional[ShardedDataset]:
         """Dataset for an exact lineage node, or None.  Host-tier hits are
         re-placed onto the mesh (and stay host-resident — promotion back
-        to the device tier is the caller's persist decision)."""
+        to the device tier is the caller's persist decision).  ``tenant``
+        identifies the reader: a hit on an entry someone ELSE paid for is
+        additionally counted as a shared (read-only) hit."""
         with self._lock:
             entry = self._entries.get(lineage)
             if entry is None:
@@ -215,6 +309,9 @@ class MaterializationCache:
             self._entries.move_to_end(lineage)
             self.hits += 1
             METRICS.counter(f"mat_cache.{entry.tier}.hits").inc()
+            if entry.owner is not None and tenant != entry.owner:
+                self.shared_hits += 1
+                METRICS.counter("mat_cache.shared_hits").inc()
             if entry.tier == "device":
                 return entry.dataset
             self.host_hits += 1
@@ -244,7 +341,8 @@ class MaterializationCache:
                     return i, lin
             return 0, None
 
-    def lookup_prefix(self, root: Lineage, plan: Plan
+    def lookup_prefix(self, root: Lineage, plan: Plan,
+                      tenant: Optional[str] = None
                       ) -> Tuple[int, Optional[str],
                                  Optional[ShardedDataset]]:
         """Atomic longest-prefix lookup + fetch for an action: returns
@@ -260,4 +358,4 @@ class MaterializationCache:
                 METRICS.counter("mat_cache.misses").inc()
                 return 0, None, None
             tier = self._entries[lin].tier
-            return k, tier, self.get(lin)
+            return k, tier, self.get(lin, tenant=tenant)

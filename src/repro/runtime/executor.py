@@ -252,13 +252,16 @@ class Executor:
             plan_cache: Optional["planner_lib.PlanCache"] = None,
             reports: Optional[ReportLog] = None,
             label: Optional[str] = None,
-            queue_wait_s: float = 0.0
+            queue_wait_s: float = 0.0,
+            tenant: Optional[str] = None
             ) -> Tuple[ShardedDataset, ActionReport]:
         """Run one action: prefix lookup, suffix dispatch, counter check,
         report.  Returns the materialized dataset (lineage = root +
         whole plan) and the action's report.  ``queue_wait_s`` is the
         async path's measured time-on-queue, recorded on the report
-        (execution wall time starts here, not at submit)."""
+        (execution wall time starts here, not at submit); ``tenant``
+        tags the report and the cache lookup with the serving-layer
+        session that issued the action."""
         cache = plan_cache if plan_cache is not None else self.plan_cache
         cache = cache if cache is not None else planner_lib.DEFAULT_CACHE
         with self._run_lock, span("action", plan=plan.describe(),
@@ -272,8 +275,8 @@ class Executor:
             cached_stages, cache_tier = 0, None
             if not plan.empty:
                 with timed("cache_lookup", phases):
-                    k, tier, cached = self.mat_cache.lookup_prefix(root,
-                                                                   plan)
+                    k, tier, cached = self.mat_cache.lookup_prefix(
+                        root, plan, tenant=tenant)
                 if cached is not None:
                     ds = cached
                     cached_stages = k
@@ -296,7 +299,8 @@ class Executor:
                 wall_s=time.monotonic() - t0,
                 phases=phases,
                 queue_wait_s=queue_wait_s,
-                label=label)
+                label=label,
+                tenant=tenant)
             action_span.set(action_id=report.action_id,
                             cached_stages=cached_stages)
             METRICS.counter("executor.actions").inc()
@@ -309,11 +313,13 @@ class Executor:
                 reports.append(report)
             return ds, report
 
-    def persist(self, ds: ShardedDataset, tier: str = "device"):
+    def persist(self, ds: ShardedDataset, tier: str = "device",
+                owner: Optional[str] = None):
         """Register a materialized dataset in the materialization cache
-        under its lineage (``MaRe.persist()``'s engine half)."""
+        under its lineage (``MaRe.persist()``'s engine half).  ``owner``
+        charges the entry to that tenant's cache-budget partition."""
         self.ensure_lineage(ds)
-        return self.mat_cache.put(ds, tier=tier)
+        return self.mat_cache.put(ds, tier=tier, owner=owner)
 
     # -- async actions -------------------------------------------------------
 
@@ -355,7 +361,8 @@ class Executor:
                       fuse: bool = True,
                       plan_cache: Optional["planner_lib.PlanCache"] = None,
                       reports: Optional[ReportLog] = None,
-                      label: Optional[str] = None) -> ActionHandle:
+                      label: Optional[str] = None,
+                      tenant: Optional[str] = None) -> ActionHandle:
         """Async :meth:`run`: dispatch the plan on the executor thread and
         (optionally) post-process the materialized dataset with
         ``finalize`` (e.g. ``dataset.collect``); the handle resolves to
@@ -368,7 +375,8 @@ class Executor:
             out, report = self.run(ds, plan, fuse=fuse,
                                    plan_cache=plan_cache, reports=reports,
                                    label=label,
-                                   queue_wait_s=handle.queue_wait_s)
+                                   queue_wait_s=handle.queue_wait_s,
+                                   tenant=tenant)
             handle.report = report
             return finalize(out) if finalize is not None else out
 

@@ -11,8 +11,9 @@ remains as a back-compat view over the newest report's counters.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import deque
-from typing import Deque, Dict, Iterator, Optional
+from typing import Deque, Dict, Iterator, List, Optional
 
 
 @dataclasses.dataclass
@@ -39,20 +40,37 @@ class ActionReport:
     #: slow action look fast).
     queue_wait_s: float = 0.0
     label: Optional[str] = None     # e.g. "wave 3" on the wave path
+    #: Serving layer: tenant whose session issued this action (None for
+    #: direct single-user executor use).
+    tenant: Optional[str] = None
+    #: Serving layer: number of coalesced same-plan actions this dispatch
+    #: served (1 = not batched) and, on a follower's report, the
+    #: action_id of the batch leader whose execution it shared.
+    batch_size: int = 1
+    batch_leader: Optional[int] = None
 
     @property
     def executed_stages(self) -> int:
         return self.total_stages - self.cached_stages
 
+    @property
+    def diagnostics(self) -> Dict[str, int]:
+        """Per-stage counter totals, keyed ``"stage<i>.<kind>"`` — the
+        view the deprecated ``MaRe.last_diagnostics`` dict exposed."""
+        return self.counters
+
     def describe(self) -> str:
         hit = (f", cached_prefix={self.cached_stages}/{self.total_stages}"
                f" ({self.cache_tier})" if self.cached_stages else "")
         tag = f" [{self.label}]" if self.label else ""
+        who = f" tenant={self.tenant}" if self.tenant else ""
         qw = (f", queue_wait={self.queue_wait_s * 1e3:.1f}ms"
               if self.queue_wait_s else "")
-        return (f"action#{self.action_id}{tag}: {self.plan}{hit}, "
+        batched = (f", batch={self.batch_size}" if self.batch_size > 1
+                   else "")
+        return (f"action#{self.action_id}{tag}:{who} {self.plan}{hit}, "
                 f"compiled={self.programs_compiled}, "
-                f"wall={self.wall_s * 1e3:.1f}ms{qw}")
+                f"wall={self.wall_s * 1e3:.1f}ms{qw}{batched}")
 
 
 class ReportLog:
@@ -134,3 +152,49 @@ class ReportLog:
                     f"{s / len(reports) * 1e3:>8.2f}ms "
                     f"{s / wall * 100 if wall else 0:>6.1f}%")
         return "\n".join(lines)
+
+
+class ReportStream(ReportLog):
+    """A :class:`ReportLog` that consumers can *wait on* — the per-tenant
+    report channel of the serving layer.
+
+    Producers (the service's dispatch path) ``append`` from worker
+    threads; a session-side consumer blocks in :meth:`wait_for` /
+    :meth:`next_after` for reports it has not seen yet, turning the log
+    into a live stream without polling.  All ReportLog accessors remain
+    available (and are made thread-safe here).
+    """
+
+    def __init__(self, maxlen: int = 256) -> None:
+        super().__init__(maxlen)
+        self._cond = threading.Condition()
+
+    def new_id(self) -> int:
+        with self._cond:
+            return super().new_id()
+
+    def append(self, report: ActionReport) -> None:
+        with self._cond:
+            super().append(report)
+            self._cond.notify_all()
+
+    def wait_for(self, appended: int, timeout: Optional[float] = None
+                 ) -> bool:
+        """Block until the stream's lifetime append count reaches
+        ``appended`` (False on timeout)."""
+        with self._cond:
+            return self._cond.wait_for(lambda: self.appended >= appended,
+                                       timeout)
+
+    def next_after(self, seen: int, timeout: Optional[float] = None
+                   ) -> List[ActionReport]:
+        """Reports appended after the first ``seen`` (blocking until at
+        least one arrives, or ``[]`` on timeout).  Consumer-side cursor
+        pattern: ``seen += len(batch)`` after each call.  Reports that
+        aged out of the bounded history before being read are skipped."""
+        with self._cond:
+            if not self._cond.wait_for(lambda: self.appended > seen,
+                                       timeout):
+                return []
+            missed = self.appended - seen
+            return list(self._reports)[-min(missed, len(self._reports)):]

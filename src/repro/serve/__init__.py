@@ -1,0 +1,27 @@
+"""repro.serve — the multi-tenant interactive query service.
+
+Layering: :mod:`repro.core` builds lazy plans, :mod:`repro.runtime`
+executes actions against one pair of caches, and **this package puts a
+service boundary above the runtime**: N concurrent sessions (tenants)
+share one executor, one materialization cache and one compile cache,
+with the policies a shared deployment needs — admission control and
+deficit-round-robin fairness (:mod:`~repro.serve.scheduler`),
+cross-session batching of identical queries (:mod:`~repro.serve.batching`),
+per-tenant cache-budget partitions, and per-tenant report streams
+(:mod:`~repro.serve.service`, :mod:`~repro.serve.session`).
+
+Entry points: ``QueryService(config=ServiceConfig(...))`` then
+``svc.session("alice").mare(data)...collect()``; or a standalone
+``Session(tenant="alice")`` for the single-tenant case.  The serving
+loop is ``python -m repro.launch.serve --service``; the load benchmark
+is ``benchmarks/serve.py`` (docs/serving.md walks through both).
+"""
+from repro.serve.batching import BatchKey, Pending, batch_key
+from repro.serve.scheduler import AdmissionError, DeficitRoundRobin
+from repro.serve.service import QueryService, ServiceConfig
+from repro.serve.session import Session
+
+__all__ = [
+    "AdmissionError", "BatchKey", "DeficitRoundRobin", "Pending",
+    "QueryService", "ServiceConfig", "Session", "batch_key",
+]

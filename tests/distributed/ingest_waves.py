@@ -50,7 +50,7 @@ total = (MaRe.from_source(fasta_source(path, split_bytes=1 << 10),
                           mesh=mesh)
          .map(image="ubuntu", command="grep-chars GC")
          .reduce(image="ubuntu", command="awk-sum")
-         .collect_first_shard())
+         .collect(shard=0))
 assert int(total[0][0]) == expected
 
 print("OK")

@@ -29,27 +29,27 @@ out_keys, (out_sum,), out_cnt = sal.collect()
 got = {int(k): (int(s), int(c))
        for k, s, c in zip(out_keys, out_sum, out_cnt)}
 assert got == expected, (got, expected)
-assert sal.last_diagnostics["stage0.shuffle_dropped"] == 0
-assert sal.last_diagnostics["stage0.key_overflow"] == 0
+assert sal.report().diagnostics["stage0.shuffle_dropped"] == 0
+assert sal.report().diagnostics["stage0.key_overflow"] == 0
 
 # salting shrinks the static exchange buffers vs the single-hop baseline
 raw = keyed()
 raw.collect()
-rows_raw = raw.last_diagnostics["stage0.exchange_buffer_rows"]
-rows_sal = sal.last_diagnostics["stage0.exchange_buffer_rows"]
+rows_raw = raw.report().diagnostics["stage0.exchange_buffer_rows"]
+rows_sal = sal.report().diagnostics["stage0.exchange_buffer_rows"]
 assert rows_sal < rows_raw, (rows_sal, rows_raw)
 # hop-1 spreads the hot key: no destination sees ~90% of a shard
-assert (sal.last_diagnostics["stage0.max_send_count"]
-        < raw.last_diagnostics["stage0.max_send_count"])
+assert (sal.report().diagnostics["stage0.max_send_count"]
+        < raw.report().diagnostics["stage0.max_send_count"])
 
 # max_send_count is a valid feedback capacity: re-plan with the reported
 # tight bound, still lossless, smaller buffers
-tight = raw.last_diagnostics["stage0.max_send_count"]
+tight = raw.report().diagnostics["stage0.max_send_count"]
 assert 0 < tight <= len(keys)
 rerun = keyed(capacity=tight)
 rerun.collect()
-assert rerun.last_diagnostics["stage0.shuffle_dropped"] == 0
-assert (rerun.last_diagnostics["stage0.exchange_buffer_rows"]
-        < raw.last_diagnostics["stage0.exchange_buffer_rows"])
+assert rerun.report().diagnostics["stage0.shuffle_dropped"] == 0
+assert (rerun.report().diagnostics["stage0.exchange_buffer_rows"]
+        < raw.report().diagnostics["stage0.exchange_buffer_rows"])
 
 print("OK")

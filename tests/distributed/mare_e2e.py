@@ -10,11 +10,11 @@ rng = np.random.default_rng(0)
 dna = rng.integers(0, 4, size=1000).astype(np.int32)
 true_gc = int(np.sum((dna == 2) | (dna == 3)))
 out = (MaRe((dna,))
-       .map(inputMountPoint=TextFile("/dna"), outputMountPoint=TextFile("/count"),
+       .map(input_mount=TextFile("/dna"), output_mount=TextFile("/count"),
             image="ubuntu", command="grep-count 2 3")
-       .reduce(inputMountPoint=TextFile("/counts"), outputMountPoint=TextFile("/sum"),
+       .reduce(input_mount=TextFile("/counts"), output_mount=TextFile("/sum"),
                image="ubuntu", command="awk-sum"))
-res = out.collect_first_shard()
+res = out.collect(shard=0)
 assert int(res[0][0]) == true_gc, (res, true_gc)
 
 scores = rng.normal(size=500).astype(np.float32)
@@ -22,7 +22,7 @@ payload = np.arange(500, dtype=np.int32)
 true_top = set(np.argsort(-scores)[:30].tolist())
 for depth in (1, 2, 3):
     r = MaRe((scores, payload)).reduce(image="toolbox/topk", k=30, depth=depth)
-    _, p_out = r.collect_first_shard()
+    _, p_out = r.collect(shard=0)
     assert set(p_out.tolist()) == true_top, depth
 
 vals = np.arange(64, dtype=np.int32)

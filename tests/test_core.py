@@ -15,13 +15,13 @@ def test_gc_count_single_device():
     dna = rng.integers(0, 4, size=333).astype(np.int32)
     true_gc = int(np.sum((dna == 2) | (dna == 3)))
     out = (MaRe((dna,))
-           .map(inputMountPoint=TextFile("/dna"),
-                outputMountPoint=TextFile("/count"),
+           .map(input_mount=TextFile("/dna"),
+                output_mount=TextFile("/count"),
                 image="ubuntu", command="grep-count 2 3")
-           .reduce(inputMountPoint=TextFile("/counts"),
-                   outputMountPoint=TextFile("/sum"),
+           .reduce(input_mount=TextFile("/counts"),
+                   output_mount=TextFile("/sum"),
                    image="ubuntu", command="awk-sum"))
-    assert int(out.collect_first_shard()[0][0]) == true_gc
+    assert int(out.collect(shard=0)[0][0]) == true_gc
 
 
 def test_map_is_lazy_and_fused():

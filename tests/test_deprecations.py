@@ -1,0 +1,150 @@
+"""Deprecated-shim contract: every legacy spelling warns EXACTLY once
+per process, forwards its arguments unchanged, and the repo-wide pytest
+filter (pytest.ini) turns the warnings into errors everywhere else."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import deprecations
+from repro.core import MaRe, PlanCache, TextFile
+from repro.core.mare import (PAPER_KWARG_ALIASES, PAPER_METHOD_ALIASES)
+from repro.deprecations import MaReDeprecationWarning
+
+pytestmark = pytest.mark.filterwarnings(
+    "always::repro.deprecations.MaReDeprecationWarning")
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warn_once():
+    # warn-once state is process-global; each test starts clean
+    deprecations.reset()
+    yield
+    deprecations.reset()
+
+
+def _m(n=32):
+    return MaRe((np.arange(n, dtype=np.int32),), plan_cache=PlanCache())
+
+
+def _ident_op():
+    from repro.core.container import ContainerOp
+    return ContainerOp(image="dep/id", fn=lambda part, **kw: part)
+
+
+def test_category_is_a_deprecation_warning():
+    assert issubclass(MaReDeprecationWarning, DeprecationWarning)
+
+
+def test_warn_once_is_per_key_not_per_call():
+    with pytest.warns(MaReDeprecationWarning):
+        _m().collect_first_shard()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        _m().collect_first_shard()          # second call: silent
+        with pytest.warns(MaReDeprecationWarning):
+            _m().collect_async().result(timeout=60)   # different key
+    assert not [w for w in caught
+                if issubclass(w.category, MaReDeprecationWarning)]
+
+
+# -- action shims forward exactly --------------------------------------------
+
+def test_collect_async_forwards(monkeypatch):
+    seen = {}
+    monkeypatch.setattr(
+        MaRe, "collect",
+        lambda self, **kw: seen.update(kw) or "value")
+    with pytest.warns(MaReDeprecationWarning, match="collect_async"):
+        assert _m().collect_async(label="x") == "value"
+    assert seen == {"asynchronous": True, "label": "x"}
+
+
+def test_collect_first_shard_forwards(monkeypatch):
+    seen = {}
+    monkeypatch.setattr(
+        MaRe, "collect",
+        lambda self, **kw: seen.update(kw) or "value")
+    with pytest.warns(MaReDeprecationWarning,
+                      match="collect_first_shard"):
+        assert _m().collect_first_shard() == "value"
+    assert seen == {"shard": 0}
+
+
+def test_collect_first_shard_async_forwards(monkeypatch):
+    seen = {}
+    monkeypatch.setattr(
+        MaRe, "collect",
+        lambda self, **kw: seen.update(kw) or "value")
+    with pytest.warns(MaReDeprecationWarning,
+                      match="collect_first_shard_async"):
+        assert _m().collect_first_shard_async(label="w3") == "value"
+    assert seen == {"shard": 0, "asynchronous": True, "label": "w3"}
+
+
+def test_collect_shims_equal_canonical_results():
+    data = (np.arange(8, dtype=np.int32),)
+    with pytest.warns(MaReDeprecationWarning):
+        legacy = MaRe(data, plan_cache=PlanCache()).collect_first_shard()
+    canonical = MaRe(data, plan_cache=PlanCache()).collect(shard=0)
+    assert legacy[0].tolist() == canonical[0].tolist()
+
+
+# -- last_diagnostics shim ----------------------------------------------------
+
+def test_last_diagnostics_is_view_over_newest_report():
+    m = _m().map(op=_ident_op())
+    m.collect()
+    with pytest.warns(MaReDeprecationWarning, match="last_diagnostics"):
+        assert m.last_diagnostics == m.report().diagnostics
+    fresh = _m()
+    deprecations.reset()
+    with pytest.warns(MaReDeprecationWarning):
+        assert fresh.last_diagnostics == {}   # no action yet -> empty
+
+
+# -- paper-spelling aliases ---------------------------------------------------
+
+def test_method_alias_table_is_applied_and_forwards(monkeypatch):
+    assert PAPER_METHOD_ALIASES == {"repartitionBy": "repartition_by",
+                                    "reduceByKey": "reduce_by_key"}
+    calls = {}
+    monkeypatch.setattr(
+        MaRe, "repartition_by",
+        lambda self, *a, **kw: calls.update(args=a, kwargs=kw) or "rb")
+    key = lambda recs: recs[0]
+    with pytest.warns(MaReDeprecationWarning, match="repartitionBy"):
+        assert _m().repartitionBy(key, capacity=7) == "rb"
+    assert calls == {"args": (key,), "kwargs": {"capacity": 7}}
+
+
+def test_reduce_by_key_alias_forwards_all_kwargs(monkeypatch):
+    calls = {}
+    monkeypatch.setattr(
+        MaRe, "reduce_by_key",
+        lambda self, *a, **kw: calls.update(args=a, kwargs=kw) or "rbk")
+    key = lambda recs: recs[0]
+    with pytest.warns(MaReDeprecationWarning, match="reduceByKey"):
+        assert _m().reduceByKey(key, num_keys=3, op="max") == "rbk"
+    assert calls == {"args": (key,),
+                     "kwargs": {"num_keys": 3, "op": "max"}}
+
+
+def test_mount_kwarg_aliases_translate():
+    assert PAPER_KWARG_ALIASES == {"inputMountPoint": "input_mount",
+                                   "outputMountPoint": "output_mount"}
+    with pytest.warns(MaReDeprecationWarning, match="inputMountPoint"):
+        legacy = _m().map(inputMountPoint=TextFile("/x", dtype=np.int32),
+                          outputMountPoint=TextFile("/y"),
+                          image="ubuntu", command="grep-count 1 2")
+    canonical = _m().map(input_mount=TextFile("/x", dtype=np.int32),
+                         output_mount=TextFile("/y"),
+                         image="ubuntu", command="grep-count 1 2")
+    assert legacy.describe() == canonical.describe()
+
+
+def test_both_alias_and_canonical_kwarg_is_an_error():
+    with pytest.raises(TypeError, match="both"):
+        _m().map(inputMountPoint=TextFile("/x"),
+                 input_mount=TextFile("/x"),
+                 image="ubuntu", command="grep-chars GC")

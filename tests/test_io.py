@@ -177,5 +177,5 @@ def test_mare_from_source_gc_pipeline(tmp_path):
     total = (MaRe.from_source(fasta_source(str(p), split_bytes=256))
              .map(image="ubuntu", command="grep-chars GC")
              .reduce(image="ubuntu", command="awk-sum")
-             .collect_first_shard())
+             .collect(shard=0))
     assert int(total[0][0]) == seq.count("G") + seq.count("C")

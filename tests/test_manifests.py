@@ -225,7 +225,7 @@ def test_mount_contract_checked_at_plan_time():
     m = MaRe((np.arange(8, dtype=np.float32),), plan_cache=cache)
     with pytest.raises(PlanTypeError) as exc:
         m.map(image="toolbox/concat",
-              inputMountPoint=TextFile("/x", dtype=jnp.int32))
+              input_mount=TextFile("/x", dtype=jnp.int32))
     assert "stage 0" in str(exc.value)
     assert "input mount" in str(exc.value)
     assert cache.stats()["misses"] == 0

@@ -157,7 +157,7 @@ def test_traced_action_exports_nested_spans_and_phases(tmp_path):
                 >= f_ev["ts"] + f_ev["dur"])
 
     # phase breakdown accounts for the action wall (acceptance: >= 90%)
-    rep = q.reports.latest
+    rep = q.report()
     assert rep.phases and {"plan.build", "plan.compile",
                            "dispatch"} <= set(rep.phases)
     total = sum(rep.phases.values())

@@ -56,7 +56,7 @@ def test_whole_chain_compiles_one_program():
          .map(image="toolbox/concat")
          .repartition_by(lambda recs: recs[1] % 3)
          .reduce(image="toolbox/topk", k=8))
-    _, top_ids = m.collect_first_shard()
+    _, top_ids = m.collect(shard=0)
     true_top = set(np.argsort(-scores)[:8].tolist())
     assert set(top_ids.tolist()) == true_top
     assert cache.stats() == {"programs": 1, "hits": 0, "misses": 1}
@@ -71,7 +71,7 @@ def test_fused_equals_stage_at_a_time():
              .map(image="toolbox/concat")
              .repartition_by(_key_mod5)
              .reduce(image="toolbox/sum"))
-        out = m.collect_first_shard()
+        out = m.collect(shard=0)
         return out, cache.stats()
 
     fused, fused_stats = run(True)
@@ -243,13 +243,13 @@ def test_reduce_by_key_combiner_shrinks_exchange():
     on.collect()
     off = _keyed((keys, vals), num_keys=4, combiner=False)
     off.collect()
-    ex_on = on.last_diagnostics["stage0.exchanged_records"]
-    ex_off = off.last_diagnostics["stage0.exchanged_records"]
+    ex_on = on.report().diagnostics["stage0.exchanged_records"]
+    ex_off = off.report().diagnostics["stage0.exchanged_records"]
     assert ex_off == 256                   # every record crosses the wire
     # at most one partial per key per shard (CI runs 8 simulated devices)
     assert ex_on <= 4 * jax.device_count()
     assert ex_on < ex_off
-    assert on.last_diagnostics["stage0.key_overflow"] == 0
+    assert on.report().diagnostics["stage0.key_overflow"] == 0
 
 
 def test_reduce_by_key_is_lazy_and_fuses_to_one_program():
@@ -311,7 +311,7 @@ def test_reduce_by_key_all_records_masked_out():
                                num_keys=8)
     out_keys, (out_sum,), out_cnt = m.collect()
     assert out_keys.shape[0] == 0
-    assert m.last_diagnostics["stage0.key_overflow"] == 0
+    assert m.report().diagnostics["stage0.key_overflow"] == 0
 
 
 @pytest.mark.parametrize("combiner", [True, False])
@@ -378,8 +378,8 @@ def test_reduce_by_key_salted_hot_key_matches_groupby():
     exp = {int(k): (int(vals[keys == k].sum()), int((keys == k).sum()))
            for k in np.unique(keys)}
     assert got == exp
-    assert sal.last_diagnostics["stage0.shuffle_dropped"] == 0
-    assert sal.last_diagnostics["stage0.key_overflow"] == 0
+    assert sal.report().diagnostics["stage0.shuffle_dropped"] == 0
+    assert sal.report().diagnostics["stage0.key_overflow"] == 0
 
 
 def test_salted_diagnostics_present_and_lossless():
@@ -389,7 +389,7 @@ def test_salted_diagnostics_present_and_lossless():
     keys, vals = _hot_key_data()
     sal = _keyed((keys, vals), num_keys=32, combiner=False, salt=8)
     sal.collect()
-    d = sal.last_diagnostics
+    d = sal.report().diagnostics
     assert d["stage0.shuffle_dropped"] == 0
     assert 0 < d["stage0.max_send_count"] <= len(keys)
     assert d["stage0.exchange_buffer_rows"] > 0

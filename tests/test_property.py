@@ -83,7 +83,7 @@ def test_mare_reduce_depth_invariance(seed, n, k):
     for depth in (1, k):
         r = MaRe((scores, np.arange(n, dtype=np.int32))).reduce(
             image="toolbox/topk", k=5, depth=depth)
-        _, idx = r.collect_first_shard()
+        _, idx = r.collect(shard=0)
         results.append(set(idx.tolist()))
     assert results[0] == results[1] == want
 

@@ -64,7 +64,7 @@ def test_persist_prefix_hit_on_forked_handle():
     got = q.collect()
     assert sorted(got[0].tolist()) == list(range(32))
     assert traces["n"] == traces_after_persist
-    report = q.reports.latest
+    report = q.report()
     assert report.cached_stages == 1 and report.total_stages == 2
     assert report.cache_tier == "device"
 
@@ -80,7 +80,7 @@ def test_whole_plan_hit_compiles_and_executes_nothing():
     q = base.map(op=op)                     # exactly the persisted plan
     got = q.collect()
     assert sorted(got[0].tolist()) == list(range(32))
-    report = q.reports.latest
+    report = q.report()
     assert report.cached_stages == report.total_stages == 1
     assert report.programs_compiled == 0
     assert cache.stats()["misses"] == compiles_after_persist
@@ -95,7 +95,7 @@ def test_different_prefix_misses():
 
     q = base.map(op=op_b)                   # different op -> different node
     q.collect()
-    assert q.reports.latest.cached_stages == 0
+    assert q.report().cached_stages == 0
     assert traces_b["n"] == 1               # really executed
 
 
@@ -107,7 +107,7 @@ def test_separately_parallelized_hosts_do_not_share_lineage():
     MaRe(_data(), plan_cache=PlanCache(), executor=ex).map(op=op).persist()
     q = MaRe(_data(), plan_cache=PlanCache(), executor=ex).map(op=op)
     q.collect()
-    assert q.reports.latest.cached_stages == 0
+    assert q.report().cached_stages == 0
 
 
 def test_cache_is_persist_sugar():
@@ -119,7 +119,7 @@ def test_cache_is_persist_sugar():
     assert cached.plan.empty
     q = base.map(op=op)
     q.collect()
-    assert q.reports.latest.cached_stages == 1
+    assert q.report().cached_stages == 1
 
 
 def test_ingest_lineage_is_content_keyed(tmp_path):
@@ -140,7 +140,7 @@ def test_ingest_lineage_is_content_keyed(tmp_path):
     m2.plan_cache = cache
     q = m2.map(op=op)
     q.collect()
-    assert q.reports.latest.cached_stages == 1
+    assert q.report().cached_stages == 1
     assert traces["n"] == after_persist
 
 
@@ -207,8 +207,8 @@ def test_prefix_hit_from_host_tier_via_executor():
     q = base.map(op=op).repartition_by(_key_mod3)
     got = q.collect()
     assert sorted(got[0].tolist()) == list(range(32))
-    assert q.reports.latest.cached_stages == 1
-    assert q.reports.latest.cache_tier == "host"
+    assert q.report().cached_stages == 1
+    assert q.report().cache_tier == "host"
     assert traces["n"] == 1                 # prefix still not re-traced
 
 
@@ -222,7 +222,7 @@ def test_async_actions_preserve_fifo_order():
     for i in range(5):
         m = MaRe((np.full(16, i, np.int32),), plan_cache=cache,
                  executor=ex).map(op=op)
-        handles.append(m.collect_async(label=f"q{i}"))
+        handles.append(m.collect(asynchronous=True, label=f"q{i}"))
     for i, h in enumerate(handles):
         got = h.result(timeout=60)
         assert got[0].tolist() == [i] * 16
@@ -238,7 +238,7 @@ def test_async_action_delivers_exceptions():
     m = (MaRe((np.arange(4 * jax.device_count(), dtype=np.int32),),
               plan_cache=PlanCache(), executor=ex)
          .repartition_by(lambda recs: recs[0] * 0, capacity=1))
-    h = m.collect_async()
+    h = m.collect(asynchronous=True)
     with pytest.raises(RuntimeError, match="overflow"):
         h.result(timeout=60)
 
@@ -262,7 +262,7 @@ def test_queue_wait_measured_separately_from_execution():
     op, _ = _counting_op("rt/qw")
     m = MaRe(_data(), plan_cache=PlanCache(), executor=ex).map(op=op)
     t_submit = time.monotonic()
-    h = m.collect_async(label="queued")
+    h = m.collect(asynchronous=True, label="queued")
     time.sleep(0.25)
     gate.set()
     h.result(timeout=60)
@@ -309,7 +309,7 @@ def test_async_is_snapshot_not_mutation():
     op, _ = _counting_op()
     ex = _executor()
     m = MaRe(_data(), plan_cache=PlanCache(), executor=ex).map(op=op)
-    h = m.collect_async()
+    h = m.collect(asynchronous=True)
     h.result(timeout=60)
     assert not m.plan.empty                 # handle left lazy
 
@@ -324,7 +324,7 @@ def _val_second(recs):
     return (recs[1],)
 
 
-def test_last_diagnostics_survives_chaining():
+def test_report_diagnostics_survive_chaining():
     keys = np.array([0, 1, 2, 3] * 8, np.int32)
     vals = np.ones(32, np.float32)
     ex = _executor()
@@ -332,15 +332,15 @@ def test_last_diagnostics_survives_chaining():
              executor=ex).reduce_by_key(_key_first, value_by=_val_second,
                                         op="sum", num_keys=4)
     m.collect()
-    diag = m.last_diagnostics
+    diag = m.report().diagnostics
     assert diag["stage0.exchanged_records"] > 0
 
     chained = m.map(op=_ident_op())         # pre-runtime: history vanished
-    assert chained.last_diagnostics == diag
+    assert chained.report().diagnostics == diag
     chained.collect()
-    assert len(chained.reports) == 2
-    assert chained.reports[0].counters == diag
-    assert chained.last_diagnostics == {}   # map-only action: no counters
+    assert len(chained.reports()) == 2
+    assert chained.reports()[0].counters == diag
+    assert chained.report().diagnostics == {}  # map-only action: no counters
 
 
 def test_report_counters_keep_absolute_stage_indices_after_prefix_hit():
@@ -355,10 +355,10 @@ def test_report_counters_keep_absolute_stage_indices_after_prefix_hit():
     q = base.map(op=op).reduce_by_key(_key_first, value_by=_val_second,
                                       op="sum", num_keys=4)
     q.collect()
-    report = q.reports.latest
+    report = q.report()
     assert report.cached_stages == 1
     assert "stage1.exchanged_records" in report.counters
-    assert q.reports.total("exchanged_records") > 0
+    assert q.reports().total("exchanged_records") > 0
 
 
 def test_describe_lists_keyed_reduce_counter_specs():

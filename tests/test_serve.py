@@ -1,0 +1,271 @@
+"""Serving layer: DRR scheduler, admission, cross-session batching,
+per-tenant cache partitions, report streams, and tenant isolation."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import MaRe, PlanCache
+from repro.core.container import ContainerOp
+from repro.core.dataset import from_host
+from repro.obs import METRICS
+from repro.runtime import Executor, MaterializationCache, estimate_nbytes
+from repro.serve import (AdmissionError, DeficitRoundRobin, QueryService,
+                         ServiceConfig, Session)
+
+
+# -- scheduler (no jax) -------------------------------------------------------
+
+def test_drr_alternates_equal_cost_tenants():
+    drr = DeficitRoundRobin(quantum=1.0)
+    for i in range(3):
+        drr.offer("a", f"a{i}", cost=1.0)
+        drr.offer("b", f"b{i}", cost=1.0)
+    taken = [drr.take(timeout=0) for _ in range(6)]
+    # equal costs + quantum 1: strict alternation, no tenant bursts
+    assert taken == ["a0", "b0", "a1", "b1", "a2", "b2"]
+    assert drr.take(timeout=0) is None
+
+
+def test_drr_serves_cost_share_not_item_share():
+    # tenant "big" queues 4-cost items, "small" 1-cost: over any window
+    # both get the same COST share, so "small" gets ~4x the items
+    drr = DeficitRoundRobin(quantum=2.0, max_queued_per_tenant=16)
+    for i in range(4):
+        drr.offer("big", f"B{i}", cost=4.0)
+    for i in range(12):
+        drr.offer("small", f"s{i}", cost=1.0)
+    first8 = [drr.take(timeout=0) for _ in range(8)]
+    n_small = sum(1 for t in first8 if t.startswith("s"))
+    assert n_small >= 2 * (8 - n_small)
+
+def test_drr_admission_limits_both_scopes():
+    drr = DeficitRoundRobin(max_queued_per_tenant=2, max_queued_total=3)
+    drr.offer("a", 1)
+    drr.offer("a", 2)
+    with pytest.raises(AdmissionError) as e:
+        drr.offer("a", 3)
+    assert e.value.scope == "tenant" and e.value.tenant == "a"
+    drr.offer("b", 4)
+    with pytest.raises(AdmissionError) as e:
+        drr.offer("b", 5)
+    assert e.value.scope == "total"
+    assert drr.depths() == {"a": 2, "b": 1}
+
+
+def test_drr_extract_pulls_matches_from_all_tenants():
+    drr = DeficitRoundRobin()
+    drr.offer("a", ("k1", "a0"))
+    drr.offer("a", ("k2", "a1"))
+    drr.offer("b", ("k1", "b0"))
+    out = drr.extract(lambda it: it[0] == "k1")
+    assert sorted(v for _, v in out) == ["a0", "b0"]
+    assert len(drr) == 1
+    assert drr.take(timeout=0) == ("k2", "a1")
+    assert drr.take(timeout=0) is None
+
+
+def test_drr_take_blocks_until_offer():
+    drr = DeficitRoundRobin()
+    got = []
+    t = threading.Thread(target=lambda: got.append(drr.take(timeout=5)))
+    t.start()
+    drr.offer("a", "x")
+    t.join(timeout=5)
+    assert got == ["x"]
+
+
+# -- service fixtures ---------------------------------------------------------
+
+def _service(**over) -> QueryService:
+    cfg = dict(batch_window_s=0.0)
+    cfg.update(over)
+    return QueryService(
+        executor=Executor(plan_cache=PlanCache(),
+                          mat_cache=MaterializationCache()),
+        config=ServiceConfig(**cfg))
+
+
+def _double_op(name="serve/double"):
+    return ContainerOp(image=name, fn=lambda part, **kw: part)
+
+
+_OP = _double_op()
+
+
+def _data(n=32):
+    return (np.arange(n, dtype=np.int32),)
+
+
+def _bad_keys(recs):
+    return recs[0]            # 0..31, far outside num_keys=2
+
+
+def _good_keys(recs):
+    return recs[0] % 2
+
+
+def _vals(recs):
+    return (recs[0],)
+
+
+# -- sessions: routing, reports, admission ------------------------------------
+
+def test_session_sync_collect_routes_through_service():
+    with _service() as svc:
+        sess = svc.session("alice")
+        out = sess.mare(_data()).map(op=_OP).collect()
+        assert out[0].tolist() == list(range(32))
+        rep = sess.report()
+        assert rep is not None and rep.tenant == "alice"
+        assert rep.batch_size == 1
+        assert sess.reports.appended == 1
+        # the executor's global history carries the dispatch too
+        assert svc.executor.reports.latest.tenant == "alice"
+
+
+def test_session_async_collect_and_labels():
+    with _service() as svc:
+        sess = svc.session("alice")
+        h = sess.mare(_data()).map(op=_OP).collect(asynchronous=True,
+                                                   label="q0")
+        assert h.result(timeout=60)[0].tolist() == list(range(32))
+        assert h.report.tenant == "alice" and h.report.label == "q0"
+
+
+def test_admission_rejection_raises_and_counts():
+    METRICS.reset()
+    with _service(max_queued_per_tenant=0) as svc:
+        sess = svc.session("carol")
+        with pytest.raises(AdmissionError):
+            sess.mare(_data()).map(op=_OP).collect()
+    assert METRICS.snapshot()["serve.admission_rejected"] == 1
+
+
+def test_session_rejects_reserved_mare_kwargs():
+    with _service() as svc:
+        sess = svc.session("alice")
+        with pytest.raises(TypeError, match="executor"):
+            sess.mare(_data(), executor=svc.executor)
+
+
+def test_report_stream_follow_blocks_until_report():
+    with _service() as svc:
+        sess = svc.session("alice")
+        got = []
+        t = threading.Thread(
+            target=lambda: got.append(sess.follow(0, timeout=30)))
+        t.start()
+        sess.mare(_data()).map(op=_OP).collect()
+        t.join(timeout=30)
+        assert len(got) == 1 and [r.tenant for r in got[0]] == ["alice"]
+
+
+# -- cross-session batching ---------------------------------------------------
+
+def test_same_query_from_two_sessions_coalesces():
+    METRICS.reset()
+    with _service(batch_window_s=0.5) as svc:
+        a, b = svc.session("alice"), svc.session("bob")
+        ds = from_host(_data(), a.mare(_data())._dataset.mesh)
+        # async back-to-back: both queued before the pump's batch window
+        # closes, so they must share ONE dispatch
+        ha = a.mare(ds).map(op=_OP).collect(asynchronous=True)
+        hb = b.mare(ds).map(op=_OP).collect(asynchronous=True)
+        va, vb = ha.result(timeout=60), hb.result(timeout=60)
+        assert va[0].tolist() == vb[0].tolist()
+        assert ha.report.batch_size == 2 and hb.report.batch_size == 2
+        assert ha.report.batch_leader == hb.report.batch_leader
+        assert {ha.report.tenant, hb.report.tenant} == {"alice", "bob"}
+        assert a.reports.appended == 1 and b.reports.appended == 1
+    snap = METRICS.snapshot()
+    assert snap["serve.batched_followers"] == 1
+    assert snap["serve.queue_depth.alice"] == 0
+    assert snap["serve.queue_depth.bob"] == 0
+
+
+def test_different_plans_never_coalesce():
+    other = _double_op("serve/other")
+    with _service(batch_window_s=0.3) as svc:
+        a, b = svc.session("alice"), svc.session("bob")
+        ds = from_host(_data(), a.mare(_data())._dataset.mesh)
+        ha = a.mare(ds).map(op=_OP).collect(asynchronous=True)
+        hb = b.mare(ds).map(op=other).collect(asynchronous=True)
+        ha.result(timeout=60), hb.result(timeout=60)
+        assert ha.report.batch_size == 1
+        assert hb.report.batch_size == 1
+
+
+# -- per-tenant cache partitions ----------------------------------------------
+
+def test_tenant_persist_charged_to_owner_partition():
+    with _service() as svc:
+        a, b = svc.session("alice"), svc.session("bob")
+        a.mare(_data()).persist()
+        assert a.cache_bytes()["device"] > 0
+        assert b.cache_bytes() == {"device": 0, "host": 0}
+
+
+def test_tenant_eviction_stays_within_owner():
+    probe = estimate_nbytes(
+        Session("probe").mare(_data())._dataset)
+    budget = int(probe * 2.5)       # fits 2 entries, 3rd must evict
+    with _service(tenant_device_budget_bytes=budget) as svc:
+        a, b = svc.session("alice"), svc.session("bob")
+        b.mare(_data()).persist()
+        b_bytes = b.cache_bytes()["device"]
+        for i in range(3):          # distinct datasets -> distinct entries
+            a.mare((np.arange(32, dtype=np.int32) + i,)).persist()
+        cache = svc.executor.mat_cache
+        # alice stayed within her partition by evicting HER entries;
+        # bob's entry is untouched and no violation was recorded
+        assert a.cache_bytes()["device"] <= budget
+        assert b.cache_bytes()["device"] == b_bytes
+        assert cache.stats()["tenant_budget_violations"] == 0
+
+
+def test_shared_prefix_read_counts_shared_hit():
+    op = _double_op("serve/prefix")
+    with _service() as svc:
+        a, b = svc.session("alice"), svc.session("bob")
+        ds = from_host(_data(), a.mare(_data())._dataset.mesh)
+        a.mare(ds).map(op=op).persist()
+        out = b.mare(ds).map(op=op).collect()
+        assert out[0].tolist() == list(range(32))
+        assert b.report().cached_stages == 1
+        assert svc.executor.mat_cache.stats()["shared_hits"] >= 1
+
+
+# -- tenant isolation ---------------------------------------------------------
+
+def test_key_overflow_in_one_session_never_poisons_another():
+    with _service() as svc:
+        a, b = svc.session("alice"), svc.session("bob")
+        bad = (a.mare(_data())
+               .reduce_by_key(_bad_keys, value_by=_vals, op="sum",
+                              num_keys=2))
+        with pytest.raises(RuntimeError, match="overflow"):
+            bad.collect()
+        # the failure is alice's alone: bob's session still serves, the
+        # pump and executor threads survived, and alice can query again
+        good = (b.mare(_data())
+                .reduce_by_key(_good_keys, value_by=_vals, op="sum",
+                               num_keys=2))
+        keys, (vals,), counts = good.collect()
+        assert sorted(np.asarray(keys).tolist()) == [0, 1]
+        assert b.report().tenant == "bob"
+        out = a.mare(_data()).map(op=_OP).collect()
+        assert out[0].tolist() == list(range(32))
+
+
+def test_async_failure_isolated_to_its_batch():
+    with _service(batch_window_s=0.2) as svc:
+        a, b = svc.session("alice"), svc.session("bob")
+        ha = (a.mare(_data())
+              .reduce_by_key(_bad_keys, value_by=_vals, op="sum",
+                             num_keys=2)
+              .collect(asynchronous=True))
+        hb = b.mare(_data()).map(op=_OP).collect(asynchronous=True)
+        with pytest.raises(RuntimeError, match="overflow"):
+            ha.result(timeout=60)
+        assert hb.result(timeout=60)[0].tolist() == list(range(32))
