@@ -1,0 +1,205 @@
+"""Streaming benchmark: incremental update cost vs full recomputation.
+
+The claim (docs/streaming.md): once a keyed aggregate is maintained
+incrementally, the per-epoch update cost scales with the *delta* size,
+not the history size — each epoch ingests only the new splits, runs the
+same compiled plan suffix (zero recompiles after epoch 0), and folds the
+delta table into the persisted state with one shard-local segment
+reduce.  A full recomputation re-ingests and re-reduces everything.
+
+Protocol: drop one file of ``lines_per_epoch`` records per epoch and
+time ``IncrementalQuery.update()`` for every epoch.  From the epoch
+where history >= 10x the epoch size onward, also time a *warm* one-shot
+``reduce_by_key`` over the union (pinned full-size capacity, so the
+one-shot program compiles once and every timed run is a compile-cache
+hit — the comparison is compute-vs-compute, not compile-vs-compute).
+
+In-script guards (full scale):
+  - incremental result == one-shot result, exactly, at the final epoch
+  - speedup = full_s / update_s >= 5 once history >= 10x epoch size
+  - zero plan-cache misses after epoch 0; exactly one fold compile
+
+Usage:  python benchmarks/stream.py [--small] [--out BENCH_stream.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import numpy as np                                          # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                                                  # noqa: E402
+from repro import compat                                    # noqa: E402
+from repro.core import MaRe, PlanCache                      # noqa: E402
+from repro.io import text_source                            # noqa: E402
+from repro.runtime import Executor, MaterializationCache    # noqa: E402
+from repro.stream import ContinuousSource, IncrementalQuery  # noqa: E402
+
+NUM_KEYS = 256
+SPEEDUP_AT = 10         # assert once history >= this many epochs
+SPEEDUP_FLOOR = 5.0
+
+
+def _key(recs):
+    # two leading bases -> key in [0, 256): a k-mer-ish bounded key space
+    d = recs["data"].astype(np.int32)
+    return (d[:, 0] * 16 + d[:, 1]) % NUM_KEYS
+
+
+def _val(recs):
+    return (recs["len"].astype(np.int32),)
+
+
+def _build(m: MaRe) -> MaRe:
+    return m.reduce_by_key(_key, value_by=_val, op="sum",
+                           num_keys=NUM_KEYS)
+
+
+FILES_PER_EPOCH = 4     # spread each epoch's splits over several shards
+
+
+def _write_epoch(root: str, epoch: int, lines: int,
+                 rng: np.random.Generator) -> None:
+    per_file = -(-lines // FILES_PER_EPOCH)
+    for part in range(FILES_PER_EPOCH):
+        n = min(per_file, lines - part * per_file)
+        rows = ["".join(rng.choice(list("ACGT"),
+                                   size=int(rng.integers(30, 60))))
+                for _ in range(n)]
+        path = os.path.join(root, f"epoch{epoch:04d}.{part}.txt")
+        with open(path + ".tmp", "w") as f:
+            f.write("\n".join(rows) + "\n")
+        os.rename(path + ".tmp", path)
+
+
+def _sorted_table(table):
+    keys, (vals,), counts = table
+    order = np.argsort(np.asarray(keys))
+    return (np.asarray(keys)[order], np.asarray(vals)[order],
+            np.asarray(counts)[order])
+
+
+def run(small: bool) -> dict:
+    epochs = 12 if small else 14
+    lines_per_epoch = 160 if small else 12800
+    mesh = compat.make_mesh((jax.device_count(),), ("data",))
+    n_shards = int(mesh.shape["data"])
+    # pinned geometries: the stream packs every epoch into delta-sized
+    # shapes; the one-shot packs every union into FINAL-sized shapes —
+    # both therefore compile exactly once.  Each <1MB file is one split,
+    # so an epoch's FILES_PER_EPOCH splits spread over that many shards
+    # (or stack up when the mesh is smaller): a shard can hold up to its
+    # share of files' worth of delta records.
+    files_per_shard = -(-FILES_PER_EPOCH // n_shards)
+    delta_cap = -(-lines_per_epoch // FILES_PER_EPOCH) * files_per_shard * 2
+    full_cap = -(-lines_per_epoch * epochs * 2 // n_shards)
+    oneshot_cache = PlanCache()
+
+    root = tempfile.mkdtemp(prefix="bench_stream_")
+    rng = np.random.default_rng(0)
+    stream_cache = PlanCache()
+    q = IncrementalQuery(
+        ContinuousSource(text_source(root), mesh, capacity=delta_cap),
+        _build, plan_cache=stream_cache,
+        executor=Executor(mat_cache=MaterializationCache()),
+        label="bench-stream")
+
+    def full_recompute():
+        one = _build(MaRe.from_source(text_source(root), mesh,
+                                      capacity=full_cap,
+                                      executor=Executor(
+                                          mat_cache=MaterializationCache())))
+        one.plan_cache = oneshot_cache
+        return one.collect()
+
+    scaling = []
+    warm_misses_after_epoch0 = 0
+    full_result = None
+    for epoch in range(epochs):
+        _write_epoch(root, epoch, lines_per_epoch, rng)
+        misses_before = stream_cache.stats()["misses"]
+        t0 = time.monotonic()
+        update = q.update()
+        update_s = time.monotonic() - t0
+        assert update is not None and update.epoch == epoch
+        if epoch > 0:
+            warm_misses_after_epoch0 += \
+                stream_cache.stats()["misses"] - misses_before
+        row = {"epoch": epoch,
+               "history_records": lines_per_epoch * (epoch + 1),
+               "delta_records": lines_per_epoch,
+               "update_ms": update_s * 1e3}
+        if epoch + 1 >= SPEEDUP_AT:
+            if epoch + 1 == SPEEDUP_AT:
+                full_recompute()            # warm the one-shot program
+            full_s = float("inf")
+            for _ in range(2):              # best of 2 warm runs
+                t0 = time.monotonic()
+                full_result = full_recompute()
+                full_s = min(full_s, time.monotonic() - t0)
+            row["full_ms"] = full_s * 1e3
+            row["speedup"] = full_s / update_s
+        scaling.append(row)
+
+    got = _sorted_table(q.collect())
+    want = _sorted_table(full_result)
+    exact = all(g.dtype == w.dtype and np.array_equal(g, w)
+                for g, w in zip(got, want))
+    assert exact, "incremental result diverged from one-shot recompute"
+
+    guarded = [r for r in scaling if "speedup" in r]
+    speedup = min(r["speedup"] for r in guarded)
+    last = scaling[-1]
+    result = {
+        "bench": "stream",
+        "small": small,
+        "devices": n_shards,
+        "epochs": epochs,
+        "records_per_epoch": lines_per_epoch,
+        "history_records": lines_per_epoch * epochs,
+        "update_ms_final": last["update_ms"],
+        "full_recompute_ms_final": last["full_ms"],
+        "incremental_speedup": speedup,
+        "recompiles_after_warm": warm_misses_after_epoch0,
+        "fold_compiles": q.fold_engine.compiles,
+        "exact_match": exact,
+        "scaling": scaling,
+    }
+    assert warm_misses_after_epoch0 == 0, \
+        f"epochs after the first recompiled {warm_misses_after_epoch0}x"
+    assert q.fold_engine.compiles == 1, q.fold_engine.compiles
+    if not small:
+        assert speedup >= SPEEDUP_FLOOR, (
+            f"incremental update only {speedup:.2f}x faster than full "
+            f"recompute at history >= {SPEEDUP_AT}x epoch size "
+            f"(floor {SPEEDUP_FLOOR}x)")
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--small", action="store_true",
+                    help="CI-sized run (guards relaxed to smoke level)")
+    ap.add_argument("--out", default="BENCH_stream.json")
+    args = ap.parse_args()
+    result = run(small=args.small)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(json.dumps({k: v for k, v in result.items() if k != "scaling"},
+                     indent=2, sort_keys=True))
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -99,6 +99,42 @@ def print_serve_table(results) -> None:
                   f"{result.get('tenant_budget_violations')}")
 
 
+def stream_rows(result: dict):
+    """Per-epoch scaling rows for the streaming benchmark
+    (BENCH_stream.json): update cost stays flat while history — and the
+    full-recompute column, where measured — grows."""
+    for row in result.get("scaling", []):
+        if not isinstance(row, dict) or "update_ms" not in row:
+            continue
+        yield (row.get("epoch"), row.get("history_records"),
+               row.get("delta_records"), row["update_ms"],
+               row.get("full_ms"), row.get("speedup"))
+
+
+def print_stream_table(results) -> None:
+    for name, result in results:
+        rows = list(stream_rows(result))
+        if not rows:
+            continue
+        print(f"\n### Streaming: incremental vs full recompute ({name})\n")
+        print("| epoch | history records | delta records | update (ms) "
+              "| full recompute (ms) | speedup |")
+        print("| --- | --- | --- | --- | --- | --- |")
+        for epoch, hist, delta, upd, full, speedup in rows:
+            print(f"| {epoch} | {hist} | {delta} | {_fmt(upd)} "
+                  f"| {_fmt(full) if full is not None else '-'} "
+                  f"| {_fmt(speedup) + 'x' if speedup is not None else '-'}"
+                  f" |")
+        headline = result.get("incremental_speedup")
+        if headline is not None:
+            print(f"\n{name}: per-epoch update = **{_fmt(headline)}x** "
+                  f"faster than full recompute at history >= 10x epoch "
+                  f"size (guard: >= 5.0 at full scale), recompiles after "
+                  f"warm = {result.get('recompiles_after_warm')}, fold "
+                  f"compiles = {result.get('fold_compiles')}, exact "
+                  f"match = {result.get('exact_match')}")
+
+
 def phase_rows(name: str, result: dict):
     """Per-phase wall breakdowns: any nested dict field whose name
     mentions 'phase' maps phase -> seconds (e.g. kmer's ``phases_cold``
@@ -178,6 +214,7 @@ def main() -> int:
             print(f"| {key} | {value} |")
     print_cache_table(results)
     print_serve_table(results)
+    print_stream_table(results)
     print_tuning_table(results)
     print_phase_table(results)
     return 0

@@ -1,6 +1,7 @@
 """k-mer statistics — keyed aggregation over a genome (reduce_by_key demo).
 
-  PYTHONPATH=src python examples/kmer_stats.py
+  PYTHONPATH=src python examples/kmer_stats.py             # batch
+  PYTHONPATH=src python examples/kmer_stats.py --follow    # live dashboard
 
 The canonical grouped-aggregation genomics workload (arXiv:1807.01566
 collects k-mer statistics at scale with exactly this shape): a FASTA
@@ -11,11 +12,19 @@ whole chain compiles to ONE shard_map program, and shuffle volume scales
 with distinct k-mers, not k-mer occurrences (see
 ``report().diagnostics["stage1.exchanged_records"]``).
 
+``--follow`` runs the same aggregation as a *live* query
+(docs/streaming.md): a sequencer drops FASTA files into an inbox, a
+tenant ``Session`` maintains the k-mer table incrementally — each new
+file batch runs only the delta through the compiled plan and folds it
+into the persisted aggregate — and the dashboard refreshes per epoch.
+
 Note the FASTA reader frames each sequence *line* as one record, so
 k-mers spanning a line boundary are not counted — the reference below
 mirrors that framing (exact for the chunked statistic, as with GC count).
 """
+import argparse
 import os
+import queue
 import sys
 import tempfile
 from collections import Counter
@@ -69,16 +78,86 @@ def ones_of(recs):
     return (recs[1],)
 
 
+def build_kmer_table(m: MaRe) -> MaRe:
+    """The aggregation both modes share: map to k-mer keys, fold by key.
+
+    Module-level on purpose — an IncrementalQuery requires the SAME plan
+    suffix every epoch (stage signatures key on callable identity)."""
+    return (m.map(image="kmer-stats", k=K)
+            .reduce_by_key(key_of, value_by=ones_of, op="sum",
+                           num_keys=4 ** K))
+
+
+def top_kmers(table, n: int = 3):
+    keys, (occurrences,), _ = table
+    got = {int(k): int(c) for k, c in zip(keys, occurrences)}
+    top = sorted(got.items(), key=lambda kv: (-kv[1], kv[0]))[:n]
+    return got, top
+
+
+def follow(epochs: int = 4, bases_per_epoch: int = 10_000):
+    """Live k-mer dashboard: a sequencer drops FASTA chunks into an
+    inbox while a tenant Session maintains the table incrementally."""
+    import jax
+
+    from repro import compat
+    from repro.serve import QueryService
+    from repro.stream import ContinuousSource, LiveQuery
+
+    inbox = tempfile.mkdtemp(prefix="mare_kmer_inbox_")
+    stage = tempfile.mkdtemp(prefix="mare_kmer_stage_")
+    mesh = compat.make_mesh((jax.device_count(),), ("data",))
+
+    with QueryService() as svc:
+        sess = svc.session("genomics")
+        cont = ContinuousSource(fasta_source(inbox, split_bytes=1 << 13),
+                                mesh, capacity=256)
+        query = sess.stream(cont, build_kmer_table, label="genomics/kmers")
+        print(query.describe())
+
+        refreshes: queue.Queue = queue.Queue()
+        all_lines = []
+        # the LiveQuery thread polls the inbox; files appear atomically
+        # (written in a staging dir, renamed in) so a half-written chunk
+        # is never ingested
+        with LiveQuery(query, interval_s=0.05, on_refresh=refreshes.put):
+            for epoch in range(epochs):
+                name = f"chunk{epoch:03d}.fa"
+                all_lines += write_genome(os.path.join(stage, name),
+                                          n_bases=bases_per_epoch,
+                                          seed=100 + epoch)
+                os.rename(os.path.join(stage, name),
+                          os.path.join(inbox, name))
+                upd = refreshes.get(timeout=120)
+                got, top = top_kmers(query.collect())
+                print(f"[watermark {upd.watermark}] +{upd.new_splits} "
+                      f"splits, fold {upd.fold_s * 1e3:.1f} ms, "
+                      f"{sum(got.values())} windows | top: "
+                      + "  ".join(f"{decode(k)} x{c}" for k, c in top))
+
+        # every refresh routed one report through the session stream
+        reports = sess.follow(0, timeout=30)
+        assert len(reports) == epochs
+        assert all(r.tenant == "genomics" for r in reports)
+        assert reports[-1].counters["stream.watermark"] == epochs - 1
+        print(query.describe())
+
+        got, _ = top_kmers(query.collect())
+        expected = reference_counts(all_lines)
+        assert got == dict(expected), \
+            "followed k-mer table mismatch vs host reference"
+        print(f"followed {epochs} epochs: {len(got)} distinct {K}-mers "
+              f"over {sum(got.values())} windows, exact vs host reference")
+        print("OK")
+
+
 def main():
     tmp = tempfile.mkdtemp(prefix="mare_kmer_")
     fasta = os.path.join(tmp, "genome.fa")
     lines = write_genome(fasta)
 
     base = MaRe.from_source(fasta_source(fasta, split_bytes=1 << 13))
-    stats = (base
-             .map(image="kmer-stats", k=K)
-             .reduce_by_key(key_of, value_by=ones_of, op="sum",
-                            num_keys=4 ** K))
+    stats = build_kmer_table(base)
     # describe() shows the inferred schema + capacity at every stage
     # boundary: the kmer-stats manifest's capacity transfer sizes the
     # window buffer (cap * (W - k + 1)) and declares key_space = 4**k,
@@ -120,4 +199,8 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--follow", action="store_true",
+                    help="live dashboard over a polled FASTA inbox")
+    args = ap.parse_args()
+    follow() if args.follow else main()

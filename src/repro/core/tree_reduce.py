@@ -259,6 +259,51 @@ def keyed_merge_partition(part: Partition, num_keys: int,
     return out, merged.overflow
 
 
+def merge_keyed_tables(state: Partition, delta: Partition, num_keys: int,
+                       op: str = "sum",
+                       use_kernel: Optional[bool] = None) -> Partition:
+    """Fold two keyed-result partitions of the SAME shard into one.
+
+    Both inputs are ``(keys, values, counts)`` record partitions as
+    produced by a ``reduce_by_key`` merge — front-compacted, capacity
+    ``num_keys``, keys already hashed to this shard.  This is the
+    incremental-maintenance primitive (repro.stream): a persisted
+    aggregate and a new epoch's delta are partitioned identically (the
+    owner shard of a key is ``hash(key) % axis_size`` either way), so the
+    fold is shard-local — no exchange, one segment-reduce over the
+    concatenated rows.
+
+    Unlike :func:`keyed_merge_partition` this cannot rely on
+    ``Partition.mask()``: the concatenation of two front-compacted tables
+    is NOT front-compacted, so validity is rebuilt per half.  Per-key
+    record counts always fold with ``sum`` (they count source records);
+    for the sum monoid they ride the same segment-reduce call.  The
+    output is front-compacted in ascending key order — bit-identical to
+    what a one-shot ``reduce_by_key`` over the union of inputs produces
+    on this shard (for int values; float sums reassociate).
+    """
+    from repro.kernels.segment_reduce.ops import segment_reduce
+    skeys, svalues, scounts = state.records
+    dkeys, dvalues, dcounts = delta.records
+    keys = jnp.concatenate([skeys, dkeys])
+    pos = jnp.arange(num_keys)
+    valid = jnp.concatenate([pos < state.count, pos < delta.count])
+    cat = jax.tree.map(lambda a, b: jnp.concatenate([a, b]),
+                       (svalues, scounts), (dvalues, dcounts))
+    values, counts = cat
+    if op == "sum":
+        leaves, treedef = jax.tree.flatten(values)
+        merged = segment_reduce(keys, tuple(leaves) + (counts,), num_keys,
+                                op="sum", valid=valid, use_kernel=use_kernel)
+        vals = jax.tree.unflatten(treedef, list(merged.values[:-1]))
+        return segment_table_to_partition(vals, merged.values[-1], num_keys)
+    merged = segment_reduce(keys, values, num_keys, op=op, valid=valid,
+                            use_kernel=use_kernel)
+    cnt = segment_reduce(keys, (counts,), num_keys, op="sum", valid=valid,
+                         use_kernel=False)
+    return segment_table_to_partition(merged.values, cnt.values[0], num_keys)
+
+
 # ---------------------------------------------------------------------------
 # Dense-gradient tree all-reduce (the trainer's paper-faithful grad sync)
 # ---------------------------------------------------------------------------

@@ -15,7 +15,8 @@ from repro.runtime.cache import (DEVICE_BUDGET_DEFAULT, HOST_BUDGET_DEFAULT,
                                  estimate_nbytes)
 from repro.runtime.executor import (DEFAULT_EXECUTOR, ActionHandle,
                                     Executor, check_counters, execute)
-from repro.runtime.lineage import Lineage, host_root, source_root
+from repro.runtime.lineage import (Lineage, host_root, source_root,
+                                   stream_root)
 from repro.runtime.reports import ActionReport, ReportLog, ReportStream
 
 __all__ = [
@@ -23,4 +24,5 @@ __all__ = [
     "DEVICE_BUDGET_DEFAULT", "Executor", "HOST_BUDGET_DEFAULT", "Lineage",
     "MaterializationCache", "ReportLog", "ReportStream", "check_counters",
     "estimate_nbytes", "execute", "host_root", "source_root",
+    "stream_root",
 ]

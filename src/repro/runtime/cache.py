@@ -124,6 +124,9 @@ class MaterializationCache:
         self.puts = 0
         self.spills = 0
         self.drops = 0
+        #: Explicit :meth:`drop` removals (streaming generation GC /
+        #: window eviction) — separate from LRU ``drops``.
+        self.invalidations = 0
         #: Count of enforcement passes that left some owner partition
         #: over its budget (impossible by construction — the serve
         #: benchmark asserts it stays 0).
@@ -167,12 +170,30 @@ class MaterializationCache:
                     "shared_hits": self.shared_hits,
                     "misses": self.misses, "puts": self.puts,
                     "spills": self.spills, "drops": self.drops,
+                    "invalidations": self.invalidations,
                     "tenant_budget_violations":
                         self.tenant_budget_violations}
 
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
+
+    def drop(self, lineage: Lineage) -> bool:
+        """Explicitly remove one entry (any tier), returning whether it
+        was resident.  This is *invalidation*, not eviction: the
+        streaming layer drops superseded snapshot generations and expired
+        window epochs the moment they can no longer be served, instead of
+        letting dead entries age out of the LRU while charging their
+        owner's budget."""
+        with self._lock:
+            entry = self._entries.pop(lineage, None)
+            if entry is None:
+                return False
+            self.invalidations += 1
+            instant("cache.invalidate", nbytes=entry.nbytes,
+                    lineage=lineage.digest())
+            METRICS.counter("mat_cache.invalidations").inc()
+            return True
 
     # -- put / eviction ------------------------------------------------------
 

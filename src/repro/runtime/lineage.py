@@ -85,3 +85,13 @@ def source_root(backend_name: str, fmt_name: str, splits: Iterable,
     for sp in splits:
         h.update(f"|{sp.path}:{sp.start}:{sp.stop}:{sp.file_size}".encode())
     return Lineage(source=("source", h.hexdigest()))
+
+
+def stream_root(base: Lineage, epoch: int) -> Lineage:
+    """Snapshot-generation root for an incrementally maintained aggregate
+    (:mod:`repro.stream`): the base lineage of the maintained query plus
+    the epoch watermark folded in so far.  Distinct epochs are distinct
+    cache keys — a persisted generation N materialization can never be
+    mistaken for generation N+1 — while the same (base, epoch) pair from
+    any handle reaches the same entry."""
+    return Lineage(source=("stream", base.source, base.stages, epoch))

@@ -41,18 +41,46 @@ class DeficitRoundRobin:
 
     def __init__(self, quantum: float = 4.0,
                  max_queued_per_tenant: int = 8,
-                 max_queued_total: int = 64) -> None:
+                 max_queued_total: int = 64,
+                 weights: Optional[Dict[str, float]] = None,
+                 default_weight: float = 1.0) -> None:
         if quantum <= 0:
             raise ValueError(f"quantum must be > 0, got {quantum}")
+        if default_weight <= 0:
+            raise ValueError(
+                f"default_weight must be > 0, got {default_weight}")
+        for tenant, w in (weights or {}).items():
+            if w <= 0:
+                raise ValueError(
+                    f"weight for tenant {tenant!r} must be > 0, got {w}")
         self.quantum = quantum
         self.max_queued_per_tenant = max_queued_per_tenant
         self.max_queued_total = max_queued_total
+        self.default_weight = default_weight
+        self._weights: Dict[str, float] = dict(weights or {})
         self._cond = threading.Condition()
         self._queues: Dict[str, Deque[Any]] = {}
         self._costs: Dict[str, Deque[float]] = {}
         self._deficits: Dict[str, float] = {}
         self._rotation: Deque[str] = deque()
         self._total = 0
+        self._total_cost = 0.0
+
+    # -- per-tenant weights (priority tiers) ----------------------------------
+
+    def weight(self, tenant: str) -> float:
+        """This tenant's service weight: its quantum per rotation visit is
+        ``quantum * weight``, so over saturation a weight-3 tenant gets ~3x
+        the served cost of a weight-1 tenant (priority tiers; cost-based
+        starvation protection is unchanged — every weight is > 0)."""
+        with self._cond:
+            return self._weights.get(tenant, self.default_weight)
+
+    def set_weight(self, tenant: str, weight: float) -> None:
+        if weight <= 0:
+            raise ValueError(f"weight must be > 0, got {weight}")
+        with self._cond:
+            self._weights[tenant] = weight
 
     # -- producer side -------------------------------------------------------
 
@@ -79,6 +107,7 @@ class DeficitRoundRobin:
             q.append(item)
             self._costs[tenant].append(max(cost, 0.0))
             self._total += 1
+            self._total_cost += max(cost, 0.0)
             self._cond.notify()
 
     # -- consumer side (the service pump) ------------------------------------
@@ -108,14 +137,18 @@ class DeficitRoundRobin:
                 item = q.popleft()
                 self._costs[tenant].popleft()
                 self._total -= 1
+                self._total_cost = max(0.0, self._total_cost - cost)
                 if q:
                     self._deficits[tenant] = self._deficits[tenant] - cost
                 else:
                     self._rotation.popleft()
                     self._deficits[tenant] = 0.0  # no banking while idle
                 return item
+            # weighted DRR: a visit grants quantum * weight, so relative
+            # served cost under saturation tracks the weight ratio
             self._deficits[tenant] = self._deficits.get(tenant, 0.0) \
-                + self.quantum
+                + self.quantum * self._weights.get(tenant,
+                                                   self.default_weight)
             self._rotation.rotate(-1)
         return None
 
@@ -136,6 +169,7 @@ class DeficitRoundRobin:
                     if pred(item):
                         out.append(item)
                         self._total -= 1
+                        self._total_cost = max(0.0, self._total_cost - cost)
                     else:
                         keep.append(item)
                         keep_costs.append(cost)
@@ -149,6 +183,13 @@ class DeficitRoundRobin:
         with self._cond:
             q = self._queues.get(tenant)
             return len(q) if q is not None else 0
+
+    def total_cost(self) -> float:
+        """Summed cost of everything queued (all tenants) — the backlog
+        size in cost units, which the service's latency-aware admission
+        multiplies by the observed per-cost-unit service rate."""
+        with self._cond:
+            return self._total_cost
 
     def depths(self) -> Dict[str, int]:
         with self._cond:

@@ -29,13 +29,17 @@ three policies between sessions and it:
 Metrics (process registry): ``serve.queue_depth.<tenant>`` gauges,
 ``serve.admission_rejected`` counter, ``serve.dispatches`` counter,
 ``serve.batched_followers`` counter, ``serve.batch_occupancy``
-histogram (mean = average actions per dispatch).
+histogram (mean = average actions per dispatch),
+``serve.service_s_per_cost`` histogram (the latency-admission rate
+estimate's samples) and ``serve.latency_rejected`` counter (rejections
+from the predicted-delay bound specifically).
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time
+from collections import deque
 from typing import Any, Callable, List, Optional
 
 from repro.core.dataset import ShardedDataset
@@ -55,6 +59,21 @@ class ServiceConfig:
     max_queued_total: int = 64
     #: DRR credit granted per rotation visit (stage-count units).
     quantum: float = 4.0
+    #: Priority tiers: per-tenant DRR weight (a visit grants
+    #: ``quantum * weight``, so a weight-3 tenant is served ~3x the cost
+    #: of a weight-1 tenant under saturation).  Unlisted tenants get
+    #: ``default_weight``.
+    tenant_weights: Optional[dict] = None
+    default_weight: float = 1.0
+    #: Latency-aware admission: reject a submission when its *predicted
+    #: queue delay* — (queued cost + its own cost) x the recently observed
+    #: seconds-per-cost-unit service rate — exceeds this bound.  None
+    #: disables the check (backlog-count limits still apply).  Cold start
+    #: admits: with no completed dispatches yet there is no rate to
+    #: predict from.
+    max_predicted_delay_s: Optional[float] = None
+    #: How many recent dispatches the service-rate estimate averages over.
+    service_rate_window: int = 32
     #: How long the pump lingers after taking a leader before harvesting
     #: same-key followers.  0 disables batching (strict DRR order).
     batch_window_s: float = 0.01
@@ -93,7 +112,13 @@ class QueryService:
         self.scheduler = DeficitRoundRobin(
             quantum=self.config.quantum,
             max_queued_per_tenant=self.config.max_queued_per_tenant,
-            max_queued_total=self.config.max_queued_total)
+            max_queued_total=self.config.max_queued_total,
+            weights=self.config.tenant_weights,
+            default_weight=self.config.default_weight)
+        # recent (wall_s / cost) samples for latency-aware admission
+        self._rate_lock = threading.Lock()
+        self._rate_samples: deque = deque(
+            maxlen=max(1, self.config.service_rate_window))
         self._stop = threading.Event()
         self._pump: Optional[threading.Thread] = None
         self._pump_lock = threading.Lock()
@@ -127,6 +152,22 @@ class QueryService:
                        reports=reports, label=label,
                        cost=max(1, len(plan.stages)), handle=handle,
                        submitted_at=handle.submitted_at)
+        bound = self.config.max_predicted_delay_s
+        if bound is not None:
+            rate = self.service_rate()
+            if rate is not None:
+                # backlog cost (everything already admitted, any tenant)
+                # plus this action, at the recently observed pace
+                predicted = (self.scheduler.total_cost() + item.cost) * rate
+                if predicted > bound:
+                    METRICS.counter("serve.admission_rejected").inc()
+                    METRICS.counter("serve.latency_rejected").inc()
+                    raise AdmissionError(
+                        f"predicted queue delay {predicted:.3f}s exceeds "
+                        f"max_predicted_delay_s={bound:.3f}s "
+                        f"(backlog cost {self.scheduler.total_cost():.1f} "
+                        f"at {rate * 1e3:.2f}ms/cost-unit)",
+                        tenant, "latency")
         try:
             self.scheduler.offer(tenant, item, cost=item.cost)
         except AdmissionError:
@@ -135,6 +176,24 @@ class QueryService:
         METRICS.gauge(f"serve.queue_depth.{tenant}").add(1)
         self._ensure_pump()
         return handle
+
+    # -- latency-aware admission ---------------------------------------------
+
+    def service_rate(self) -> Optional[float]:
+        """Mean seconds per cost unit over the recent dispatch window
+        (None until the first dispatch completes — cold start admits)."""
+        with self._rate_lock:
+            if not self._rate_samples:
+                return None
+            return sum(self._rate_samples) / len(self._rate_samples)
+
+    def observe_service_rate(self, wall_s: float, cost: float) -> None:
+        """Record one completed dispatch's pace.  Called by the dispatch
+        path; exposed so tests can seed the estimator deterministically."""
+        sample = max(0.0, wall_s) / max(cost, 1e-9)
+        with self._rate_lock:
+            self._rate_samples.append(sample)
+        METRICS.histogram("serve.service_s_per_cost").observe(sample)
 
     # -- the pump thread -----------------------------------------------------
 
@@ -185,6 +244,7 @@ class QueryService:
                     tenant=leader.tenant)
                 value = (leader.finalize(out)
                          if leader.finalize is not None else out)
+                self.observe_service_rate(report.wall_s, leader.cost)
             except BaseException as e:
                 # the whole group shares one plan, so it shares the
                 # failure; OTHER keys/tenants are untouched

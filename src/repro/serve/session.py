@@ -151,6 +151,40 @@ class Session:
         arrives or ``timeout``); cursor pattern: ``seen += len(batch)``."""
         return self.reports.next_after(seen, timeout)
 
+    # -- streaming -----------------------------------------------------------
+
+    def stream(self, source: Any, build: Callable[[MaRe], MaRe], *,
+               window: Optional[int] = None, slide: int = 1,
+               label: Optional[str] = None, **kwargs: Any):
+        """A session-scoped incremental query over a
+        :class:`~repro.stream.source.ContinuousSource` (docs/streaming.md).
+
+        Every epoch's delta action routes through this session — admitted
+        at the tenant's limits, fair-scheduled, batched — and every
+        refresh appends one report (with ``stream.*`` counters) to
+        :attr:`reports`, so :meth:`follow` wakes per refresh: wrap the
+        returned query in a :class:`~repro.stream.live.LiveQuery` for a
+        live dashboard.  ``window=None`` maintains the full-history
+        aggregate (:class:`~repro.stream.incremental.IncrementalQuery`);
+        ``window=S`` a sliding window of S epochs emitting every
+        ``slide`` arrivals (:class:`~repro.stream.windows.WindowedQuery`;
+        ``slide=S`` makes it tumbling).
+        """
+        # deferred: serve must stay importable without the stream package
+        from repro.stream import IncrementalQuery, WindowedQuery
+        for reserved in ("executor", "reports"):
+            if reserved in kwargs:
+                raise TypeError(f"Session.stream() manages {reserved!r}; "
+                                f"it cannot be overridden per query")
+        label = label if label is not None else f"{self.tenant}/stream"
+        if window is None:
+            return IncrementalQuery(source, build, executor=self.executor,
+                                    reports=self.reports, label=label,
+                                    **kwargs)
+        return WindowedQuery(source, build, size=window, slide=slide,
+                             executor=self.executor, reports=self.reports,
+                             label=label, **kwargs)
+
     # -- introspection -------------------------------------------------------
 
     def queue_depth(self) -> int:

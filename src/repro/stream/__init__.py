@@ -1,0 +1,26 @@
+"""repro.stream — incremental and windowed MapReduce over continuous
+sources (docs/streaming.md).
+
+The batch stack is reused wholesale; this package adds only the *delta*
+machinery: :class:`~repro.stream.source.ContinuousSource` polls a
+``DataSource`` for newly arrived splits (monotone split sets, one epoch
+per poll, pinned pack geometry so epochs never recompile);
+:class:`~repro.stream.incremental.IncrementalQuery` runs each epoch's
+delta through the same fused plan suffix and folds the keyed result into
+the persisted aggregate shard-locally under the manifest-declared monoid
+— update cost scales with the delta, not the history;
+:class:`~repro.stream.windows.WindowedQuery` keeps a ring of per-epoch
+partials for tumbling/sliding windows with cache-native eviction; and
+:class:`~repro.stream.live.LiveQuery` drives refreshes from a background
+thread so a tenant ``Session`` can ``follow()`` the stream.
+"""
+from repro.stream.incremental import (FoldEngine, IncrementalQuery,
+                                      StreamUpdate)
+from repro.stream.live import LiveQuery
+from repro.stream.source import ContinuousSource, EpochBatch
+from repro.stream.windows import WindowedQuery
+
+__all__ = [
+    "ContinuousSource", "EpochBatch", "FoldEngine", "IncrementalQuery",
+    "LiveQuery", "StreamUpdate", "WindowedQuery",
+]

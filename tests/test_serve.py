@@ -258,6 +258,92 @@ def test_key_overflow_in_one_session_never_poisons_another():
         assert out[0].tolist() == list(range(32))
 
 
+# -- weighted DRR (priority tiers) --------------------------------------------
+
+def test_drr_weights_bias_cost_share():
+    # gold (weight 3) vs bronze (weight 1), equal-cost items: served cost
+    # over a saturated window tracks the weight ratio
+    drr = DeficitRoundRobin(quantum=1.0, max_queued_per_tenant=32,
+                            weights={"gold": 3.0})
+    for i in range(16):
+        drr.offer("gold", f"g{i}", cost=1.0)
+        drr.offer("bronze", f"b{i}", cost=1.0)
+    first12 = [drr.take(timeout=0) for _ in range(12)]
+    n_gold = sum(1 for t in first12 if t.startswith("g"))
+    assert n_gold >= 2 * (12 - n_gold)
+    # ...but bronze is never starved outright
+    assert any(t.startswith("b") for t in first12)
+
+
+def test_drr_weight_validation_and_set_weight():
+    drr = DeficitRoundRobin()
+    assert drr.weight("anyone") == 1.0
+    drr.set_weight("vip", 2.5)
+    assert drr.weight("vip") == 2.5
+    with pytest.raises(ValueError):
+        drr.set_weight("vip", 0.0)
+    with pytest.raises(ValueError):
+        DeficitRoundRobin(weights={"x": -1.0})
+    with pytest.raises(ValueError):
+        DeficitRoundRobin(default_weight=0.0)
+
+
+def test_drr_total_cost_tracks_offer_take_extract():
+    drr = DeficitRoundRobin(quantum=8.0)
+    drr.offer("a", ("k1", "a0"), cost=3.0)
+    drr.offer("b", ("k2", "b0"), cost=2.0)
+    assert drr.total_cost() == 5.0
+    drr.take(timeout=0)
+    assert drr.total_cost() == 2.0
+    drr.extract(lambda it: it[0] == "k2")
+    assert drr.total_cost() == 0.0
+
+
+def test_service_config_weights_reach_scheduler():
+    with _service(tenant_weights={"gold": 3.0},
+                  default_weight=2.0) as svc:
+        assert svc.scheduler.weight("gold") == 3.0
+        assert svc.scheduler.weight("anyone") == 2.0
+
+
+# -- latency-aware admission --------------------------------------------------
+
+def test_latency_admission_rejects_on_predicted_delay():
+    METRICS.reset()
+    with _service(max_predicted_delay_s=0.5,
+                  max_queued_per_tenant=64, max_queued_total=64) as svc:
+        # observed pace: 1 s per cost unit -> a 1-stage action predicts
+        # (0 backlog + 1) * 1.0 = 1 s > 0.5 s bound
+        svc.observe_service_rate(wall_s=1.0, cost=1.0)
+        sess = svc.session("dave")
+        with pytest.raises(AdmissionError) as e:
+            sess.mare(_data()).map(op=_OP).collect()
+        assert e.value.scope == "latency"
+        assert sess.queue_depth() == 0      # nothing was queued
+    snap = METRICS.snapshot()
+    assert snap["serve.latency_rejected"] == 1
+    assert snap["serve.admission_rejected"] == 1
+
+
+def test_latency_admission_cold_start_admits():
+    # no completed dispatch yet -> no rate estimate -> admit even under a
+    # bound nothing could meet once the estimator is warm
+    with _service(max_predicted_delay_s=1e-9) as svc:
+        sess = svc.session("erin")
+        out = sess.mare(_data()).map(op=_OP).collect()
+        assert out[0].tolist() == list(range(32))
+        # that dispatch seeded the estimator
+        assert svc.service_rate() is not None
+
+
+def test_latency_admission_admits_under_fast_rate():
+    with _service(max_predicted_delay_s=10.0) as svc:
+        svc.observe_service_rate(wall_s=0.001, cost=1.0)
+        sess = svc.session("fay")
+        out = sess.mare(_data()).map(op=_OP).collect()
+        assert out[0].tolist() == list(range(32))
+
+
 def test_async_failure_isolated_to_its_batch():
     with _service(batch_window_s=0.2) as svc:
         a, b = svc.session("alice"), svc.session("bob")
