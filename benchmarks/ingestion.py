@@ -4,24 +4,41 @@ The paper ingests a dataset from HDFS (co-located), Swift (same DC) and S3
 (remote); speedup = T(1 worker) / T(N workers).  This benchmark generates
 a FASTA file once, then ingests it via ``MaRe.from_source`` — split
 planning, the emulated storage backend's ranged reads (latency profiles in
-``repro.io.backends.BACKEND_PROFILES``), the parallel fetch pool, record
-packing and device placement — varying the fetch-pool width.  Latency
-sleeps happen in the fetching threads, so thread scaling is honest even on
-one core.  Results land in ``BENCH_ingestion.json``.
+``repro.io.backends.BACKEND_PROFILES``), the parallel fetch pool, columnar
+framing, record packing and device placement — varying the fetch-pool
+width.  Latency sleeps happen in the fetching threads, so thread scaling
+is honest even on one core.  Results land in ``BENCH_ingestion.json``.
 
-The sweep includes a ``workers="auto"`` row per backend: the
-latency-aware default (``repro.io.default_workers``) picks the serial
-path for local storage — where ``read_split`` is GIL-bound record
-parsing and any pool width is pure overhead (the pre-fix curve showed
-~0.6x at 8 workers) — and a wide pool for latency-bound remote tiers.
-Note ``workers=1`` and local ``"auto"`` run the identical serial code
-path, so their rows should agree to within noise; the fix shows up as
-the pooled widths (2..16) sitting at or below the serial baseline on
-local while still scaling on hdfs/swift/s3.  Each configuration is
-timed ``reps`` times — reps are interleaved round-robin across the
-pool widths of a backend so background-load drift hits every
-configuration equally — and the minimum is reported (single samples on
-a shared machine swing +-30%).
+Two extra dimensions beyond the paper's figure:
+
+* ``parser``: the local-backend sweep runs twice, once with the columnar
+  vectorized framing path (``RecordBatch`` offsets + one bulk gather) and
+  once with ``parser="legacy"`` (per-line ``List[bytes]`` parsing, kept as
+  the parity oracle).  A standalone parse+pack micro-benchmark times both
+  implementations on the identical payload and reports
+  ``parse_pack_speedup`` — the headline number for the vectorization.
+* ``workers="auto"`` per backend: the latency-aware default
+  (``repro.io.default_workers``) picks a small pool for local storage
+  under the vectorized parser (framing is GIL-releasing NumPy, so
+  fetch+frame of neighboring shard bins overlap) and a wide pool for
+  latency-bound remote tiers.  Under the legacy parser any local pool
+  width is pure overhead (the pre-vectorization curve showed ~0.6x at 8
+  workers), which the legacy rows still demonstrate.
+
+Each configuration is timed ``reps`` times — reps are interleaved
+round-robin across the pool widths of a backend so background-load drift
+hits every configuration equally — and the minimum is reported (single
+samples on a shared machine swing +-30%).
+
+At full scale the script asserts its own acceptance invariants and exits
+nonzero if ingestion regressed:
+
+* ``parse_pack_speedup >= 3.0`` — vectorized framing+packing beats the
+  legacy per-line path by at least 3x on local FASTA;
+* ``local_best_pooled_speedup >= 0.95`` — pooled local ingestion no
+  longer anti-scales: the best pooled width is at worst noise-level
+  slower than serial (historically 0.45-0.6x before the shard-bin task
+  granularity fix).
 
   PYTHONPATH=src python benchmarks/ingestion.py [--small]
 """
@@ -40,11 +57,18 @@ import numpy as np
 sys.path.insert(0, "src")
 from repro.core import MaRe                         # noqa: E402
 from repro.io import fasta_source, make_backend     # noqa: E402
+from repro.io.formats import (FORMATS, pack_batches,  # noqa: E402
+                              pack_records)
 
 BACKENDS = ("local", "hdfs", "swift", "s3")
 WORKER_COUNTS = (1, 2, 4, 8, 16, "auto")
 FILE_BYTES = 1 << 20
 SPLIT_BYTES = 1 << 14          # ~64 splits -> meaningful pool parallelism
+MICRO_REPS = 7
+
+#: Acceptance floors asserted at full scale (see module docstring).
+MIN_PARSE_PACK_SPEEDUP = 3.0
+MIN_POOLED_LOCAL_SPEEDUP = 0.95
 
 
 def write_fasta(path: str, nbytes: int, seed: int = 0) -> None:
@@ -59,21 +83,58 @@ def write_fasta(path: str, nbytes: int, seed: int = 0) -> None:
             written += 71
 
 
-def ingest_once(path: str, backend_name: str, workers,
-                split_bytes: int) -> float:
+def ingest_once(path: str, backend_name: str, workers, split_bytes: int,
+                parser: str = "vectorized") -> float:
     backend = make_backend(backend_name, path)
     source = fasta_source(path, backend=backend, split_bytes=split_bytes)
     t0 = time.monotonic()
     m = MaRe.from_source(source,
-                         workers=None if workers == "auto" else workers)
+                         workers=None if workers == "auto" else workers,
+                         parser=parser)
     m.dataset.counts.block_until_ready()
     return time.monotonic() - t0
+
+
+def parse_pack_micro(path: str, reps: int) -> Dict:
+    """Head-to-head parse+pack on one in-memory payload: legacy per-line
+    parsing + row-at-a-time packing vs vectorized framing + one bulk
+    gather.  Pure host compute — no storage latency, no device_put — so
+    the ratio isolates exactly what the vectorization changed."""
+    with open(path, "rb") as f:
+        payload = f.read()
+    fmt = FORMATS["fasta"]
+    # shared geometry so both paths produce the identical [cap, w] array
+    oracle = fmt.frame(payload)
+    cap = len(oracle)
+    w = oracle.max_len
+
+    def legacy() -> np.ndarray:
+        recs = fmt.parse(payload)
+        return pack_records(recs, capacity=cap, width=w)["data"]
+
+    def vectorized() -> np.ndarray:
+        batch = fmt.frame(payload)
+        return pack_batches([batch], capacity=cap, width=w)["data"]
+
+    assert np.array_equal(legacy(), vectorized()), \
+        "parse+pack parity violation between legacy and vectorized paths"
+    t = {"legacy": [], "vectorized": []}
+    for _ in range(reps):
+        for name, fn in (("legacy", legacy), ("vectorized", vectorized)):
+            t0 = time.perf_counter()
+            fn()
+            t[name].append(time.perf_counter() - t0)
+    t_legacy, t_vec = min(t["legacy"]), min(t["vectorized"])
+    return {"payload_bytes": len(payload), "records": cap,
+            "t_legacy": t_legacy, "t_vectorized": t_vec,
+            "parse_pack_speedup": t_legacy / t_vec}
 
 
 def main() -> List[Dict]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--small", action="store_true",
-                    help="CI smoke mode: smaller file, fewer pool widths")
+                    help="CI smoke mode: smaller file, fewer pool widths, "
+                         "acceptance asserts skipped")
     ap.add_argument("--out", default="BENCH_ingestion.json")
     args = ap.parse_args()
 
@@ -81,6 +142,7 @@ def main() -> List[Dict]:
     split_bytes = SPLIT_BYTES >> 3 if args.small else SPLIT_BYTES
     worker_counts = (1, 8, "auto") if args.small else WORKER_COUNTS
     reps = 1 if args.small else 3
+    micro_reps = 2 if args.small else MICRO_REPS
 
     tmp = tempfile.mkdtemp(prefix="mare_ingest_")
     path = os.path.join(tmp, "genome.fa")
@@ -89,27 +151,63 @@ def main() -> List[Dict]:
     # warm-up: absorb one-time JAX/mesh/device_put initialization so the
     # first timed run (the speedup baseline) measures ingestion only
     ingest_once(path, "local", 1, split_bytes)
+    ingest_once(path, "local", 1, split_bytes, parser="legacy")
+
+    micro = parse_pack_micro(path, micro_reps)
+    print(f"ingestion,micro,parse_pack_speedup="
+          f"{micro['parse_pack_speedup']:.2f},"
+          f"t_legacy={micro['t_legacy'] * 1e3:.2f}ms,"
+          f"t_vectorized={micro['t_vectorized'] * 1e3:.2f}ms")
+
+    # local runs both parsers (legacy = the pre-columnar baseline); the
+    # emulated remote tiers are latency-dominated, so one parser suffices
+    sweeps = [("local", "vectorized"), ("local", "legacy")] + \
+        [(b, "vectorized") for b in BACKENDS if b != "local"]
 
     rows: List[Dict] = []
-    for backend in BACKENDS:
+    local_best_pooled = None
+    for backend, parser in sweeps:
         best = {n: None for n in worker_counts}
         for _ in range(reps):
             for n in worker_counts:
-                t = ingest_once(path, backend, n, split_bytes)
+                t = ingest_once(path, backend, n, split_bytes, parser)
                 best[n] = t if best[n] is None else min(best[n], t)
         t1 = None
         for n in worker_counts:
             t = best[n]
             t1 = t1 or t
-            rows.append({"backend": backend, "workers": n, "t": t,
-                         "speedup": t1 / t})
-            print(f"ingestion,{backend},workers={n},t={t:.3f},"
-                  f"speedup={t1/t:.2f}")
-    out = {"bench": "ingestion", "file_bytes": file_bytes,
-           "split_bytes": split_bytes, "reps": reps, "rows": rows}
+            rows.append({"backend": backend, "parser": parser,
+                         "workers": n, "t": t, "speedup": t1 / t})
+            print(f"ingestion,{backend},parser={parser},workers={n},"
+                  f"t={t:.3f},speedup={t1/t:.2f}")
+        if backend == "local" and parser == "vectorized":
+            local_best_pooled = max(
+                t1 / best[n] for n in worker_counts
+                if isinstance(n, int) and n > 1)
+            print(f"ingestion,local,best_pooled_speedup="
+                  f"{local_best_pooled:.3f}")
+
+    out = {"bench": "ingestion", "small": bool(args.small),
+           "file_bytes": file_bytes,
+           "split_bytes": split_bytes, "reps": reps,
+           "parse_pack": micro,
+           "parse_pack_speedup": micro["parse_pack_speedup"],
+           "local_best_pooled_speedup": local_best_pooled,
+           "rows": rows}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {args.out}")
+
+    if not args.small:
+        assert micro["parse_pack_speedup"] >= MIN_PARSE_PACK_SPEEDUP, (
+            f"vectorized parse+pack only "
+            f"{micro['parse_pack_speedup']:.2f}x over legacy "
+            f"(floor {MIN_PARSE_PACK_SPEEDUP}x)")
+        assert local_best_pooled >= MIN_POOLED_LOCAL_SPEEDUP, (
+            f"pooled local ingestion anti-scales: best pooled width is "
+            f"{local_best_pooled:.3f}x serial "
+            f"(floor {MIN_POOLED_LOCAL_SPEEDUP}x)")
+        print("ingestion acceptance asserts passed")
     return rows
 
 

@@ -135,6 +135,39 @@ def print_stream_table(results) -> None:
                   f"match = {result.get('exact_match')}")
 
 
+def ingestion_rows(result: dict):
+    """Fetch-pool scaling rows for the ingestion benchmark
+    (BENCH_ingestion.json): one row per backend x parser x pool width,
+    speedup relative to that sweep's serial baseline.  ``parser`` is
+    ``vectorized`` (columnar RecordBatch framing) or ``legacy`` (per-line
+    oracle) — local runs both so the vectorization win is visible."""
+    for row in result.get("rows", []):
+        if not isinstance(row, dict) or "speedup" not in row:
+            continue
+        yield (row.get("backend"), row.get("parser", "-"),
+               row.get("workers"), row["t"] * 1e3, row["speedup"])
+
+
+def print_ingestion_table(results) -> None:
+    for name, result in results:
+        rows = list(ingestion_rows(result))
+        if not rows:
+            continue
+        print(f"\n### Ingestion fetch-pool scaling ({name})\n")
+        print("| backend | parser | workers | t (ms) | speedup |")
+        print("| --- | --- | --- | --- | --- |")
+        for backend, parser, workers, t_ms, speedup in rows:
+            print(f"| {backend} | {parser} | {workers} | {_fmt(t_ms)} "
+                  f"| {_fmt(speedup)}x |")
+        micro = result.get("parse_pack_speedup")
+        pooled = result.get("local_best_pooled_speedup")
+        if micro is not None and pooled is not None:
+            print(f"\n{name}: vectorized parse+pack = **{_fmt(micro)}x** "
+                  f"legacy on local FASTA (guard: >= 3.0 at full scale), "
+                  f"best pooled local width = **{_fmt(pooled)}x** serial "
+                  f"(guard: >= 0.95 at full scale)")
+
+
 def phase_rows(name: str, result: dict):
     """Per-phase wall breakdowns: any nested dict field whose name
     mentions 'phase' maps phase -> seconds (e.g. kmer's ``phases_cold``
@@ -213,6 +246,7 @@ def main() -> int:
         for key, value in rows_for(result):
             print(f"| {key} | {value} |")
     print_cache_table(results)
+    print_ingestion_table(results)
     print_serve_table(results)
     print_stream_table(results)
     print_tuning_table(results)

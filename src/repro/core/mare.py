@@ -219,15 +219,19 @@ class MaRe:
                     width: Optional[int] = None,
                     workers: Optional[int] = None,
                     registry: Registry = DEFAULT_REGISTRY,
-                    executor: Optional[Executor] = None) -> "MaRe":
+                    executor: Optional[Executor] = None,
+                    parser: str = "vectorized") -> "MaRe":
         """Ingest a :class:`repro.io.DataSource` (storage backend + format
         + split plan) into a sharded dataset via the parallel fetch pool —
-        the paper's heterogeneous-storage entry point (Fig. 5)."""
+        the paper's heterogeneous-storage entry point (Fig. 5).
+        ``parser`` selects the framing path: ``"vectorized"`` columnar
+        :class:`~repro.io.formats.RecordBatch` (default) or the
+        ``"legacy"`` per-line oracle it is property-tested against."""
         from repro.io.ingest import ingest  # deferred: io depends on core
         if mesh is None:
             mesh = compat.make_mesh((jax.device_count(),), (axis,))
         ds = ingest(source, mesh, axis=axis, capacity=capacity,
-                    width=width, workers=workers)
+                    width=width, workers=workers, parser=parser)
         return cls(ds, registry=registry, executor=executor)
 
     # -- reports -------------------------------------------------------------

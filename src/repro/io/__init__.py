@@ -8,7 +8,8 @@ remote) realized as a real subsystem:
   ``HDFS`` / ``Swift`` / ``S3`` backends carrying the paper's latency
   profiles.
 * :mod:`repro.io.formats` — line-delimited text, FASTA and SMILES record
-  readers that pack variable-length byte records into the fixed-shape
+  readers framing splits into columnar ``RecordBatch`` offsets
+  (vectorized, zero-copy) and packing them into the fixed-shape
   ``{"data": [cap, width] uint8, "len": [cap] int32}`` contract that
   static-SPMD :class:`~repro.core.dataset.ShardedDataset` assumes.
 * :mod:`repro.io.splits` — InputSplit planning: files are carved into
@@ -25,8 +26,9 @@ remote) realized as a real subsystem:
 from repro.io.backends import (BACKEND_PROFILES, EmulatedObjectStore, HDFS,
                                LocalFS, S3, StorageBackend, Swift,
                                make_backend)
-from repro.io.formats import (FastaFormat, LineFormat, RecordFormat,
-                              SmilesFormat, pack_records, unpack_records)
+from repro.io.formats import (FastaFormat, LineFormat, RecordBatch,
+                              RecordFormat, SmilesFormat, pack_batches,
+                              pack_records, unpack_records)
 from repro.io.ingest import default_workers, ingest
 from repro.io.source import (DataSource, fasta_source, smiles_source,
                              text_source)
@@ -36,8 +38,8 @@ from repro.io.waves import WaveRunner, plan_waves
 __all__ = [
     "StorageBackend", "LocalFS", "EmulatedObjectStore", "HDFS", "Swift",
     "S3", "BACKEND_PROFILES", "make_backend",
-    "RecordFormat", "LineFormat", "FastaFormat", "SmilesFormat",
-    "pack_records", "unpack_records",
+    "RecordFormat", "RecordBatch", "LineFormat", "FastaFormat",
+    "SmilesFormat", "pack_batches", "pack_records", "unpack_records",
     "InputSplit", "plan_splits", "assign_splits",
     "DataSource", "text_source", "fasta_source", "smiles_source",
     "ingest", "default_workers", "WaveRunner", "plan_waves",

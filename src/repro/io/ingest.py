@@ -2,28 +2,35 @@
 
 The real MaRe ingestion path (paper Fig. 5): splits are fetched
 concurrently by a thread pool (latency-bound against remote storage, so
-pool width is the paper's "number of workers"), packed per shard into the
-fixed-shape byte-record contract, and placed shard-by-shard with
+pool width is the paper's "number of workers"), framed per split into a
+columnar :class:`~repro.io.formats.RecordBatch` (vectorized NumPy
+newline/offset transforms — no per-record ``bytes``), gathered per shard
+into the fixed-shape byte-record contract, and placed shard-by-shard with
 double-buffered ``jax.device_put`` (transfer of shard *s* overlaps packing
 of shard *s+1* via :func:`repro.core.dataset.from_shard_arrays`).
 
-Pool-width default: threads only pay off when fetches *wait* (remote
-request latency).  Against zero-latency local storage, ``read_split`` is
-GIL-serialized Python record parsing, so any pool width > 1 is pure
-overhead (profiled at ~0.6x of serial at 8 workers — BENCH_ingestion.json
-pre-fix); ``workers=None`` therefore picks 1 for latency-free backends
-and ``min(32, num_splits)`` for backends that declare a request latency,
-and ``workers == 1`` bypasses the executor entirely.
+Pool-width default: with the vectorized parser, a pool pays off on EVERY
+backend — remote fetches wait on request latency, and local fetches
+overlap the OS read (GIL released in ``f.read``) with framing's bulk
+NumPy ops (GIL released in the C loops), so ``workers=None`` picks a
+small pool for latency-free backends and ``min(32, num_splits)`` for
+backends that declare a request latency.  The legacy per-line parser
+(``parser="legacy"``) is GIL-serialized Python record parsing, where any
+local pool width is pure overhead (profiled at ~0.6x of serial at 8
+workers — BENCH_ingestion.json pre-vectorization), so it keeps the
+serial local default.  ``workers == 1`` bypasses the executor entirely.
 """
 from __future__ import annotations
 
+import os
+import threading
 from concurrent.futures import ThreadPoolExecutor
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from jax.sharding import Mesh
 
 from repro.core.dataset import ShardedDataset, from_shard_arrays
-from repro.io.formats import pack_records
+from repro.io.formats import RecordBatch, pack_batches, pack_records
 from repro.io.source import DataSource
 from repro.io.splits import InputSplit, assign_splits
 from repro.kernels.common import round_up
@@ -35,61 +42,101 @@ from repro.runtime.lineage import source_root
 _CAP_BUCKET = 64
 _WIDTH_BUCKET = 16
 
+#: Local (latency-free) pool cap for the vectorized parser: enough
+#: threads to overlap OS reads with framing, few enough that pool
+#: bookkeeping stays negligible against small splits.
+_LOCAL_POOL_CAP = 4
+
 
 def _round_up(x: int, m: int) -> int:
     return round_up(max(x, 1), m)
 
 
-def default_workers(backend, num_splits: int) -> int:
-    """Latency-aware fetch-pool width: 1 (serial) for latency-free
-    backends, up to 32 when each request waits on emulated/remote I/O."""
+#: Process-lifetime fetch pools keyed by width: spinning up a
+#: ThreadPoolExecutor costs ~0.5ms, which is real money against a
+#: ~10ms vectorized local ingest — repeated ingests (benchmark sweeps,
+#: waves, stream epochs) reuse the pool of their width instead.
+_POOLS: Dict[int, ThreadPoolExecutor] = {}
+_POOLS_LOCK = threading.Lock()
+
+
+def _pool(width: int) -> ThreadPoolExecutor:
+    with _POOLS_LOCK:
+        pool = _POOLS.get(width)
+        if pool is None:
+            pool = ThreadPoolExecutor(
+                max_workers=width, thread_name_prefix=f"ingest-{width}")
+            _POOLS[width] = pool
+        return pool
+
+
+def default_workers(backend, num_splits: int,
+                    parser: str = "vectorized") -> int:
+    """Latency-aware fetch-pool width.  Latency-bound (emulated/remote)
+    backends get up to 32 threads.  Latency-free backends get a small
+    pool under the vectorized parser (framing is GIL-releasing NumPy, so
+    fetch+frame of neighboring splits overlap) and the serial path under
+    ``parser="legacy"`` (GIL-bound per-line Python, where pooling
+    anti-scales)."""
     latency = float(getattr(backend, "latency_s", 0.0) or 0.0)
     if latency <= 0.0:
-        return 1
+        if parser == "legacy":
+            return 1
+        return max(1, min(_LOCAL_POOL_CAP, os.cpu_count() or 1,
+                          num_splits))
     return min(32, max(1, num_splits))
 
 
 def ingest(source: DataSource, mesh: Mesh, axis: str = "data",
            capacity: Optional[int] = None, width: Optional[int] = None,
            workers: Optional[int] = None,
-           splits: Optional[Sequence[InputSplit]] = None) -> ShardedDataset:
+           splits: Optional[Sequence[InputSplit]] = None,
+           parser: str = "vectorized") -> ShardedDataset:
     """Fetch ``source`` (or an explicit subset of its splits) into a
-    :class:`ShardedDataset` of ``{"data", "len"}`` byte records."""
+    :class:`ShardedDataset` of ``{"data", "len"}`` byte records.
+
+    ``parser`` selects the framing/packing implementation:
+    ``"vectorized"`` (default) flows columnar ``RecordBatch`` offsets
+    from storage to the device buffer; ``"legacy"`` is the per-line
+    ``List[bytes]`` oracle the property tests pin it against.
+    """
+    if parser not in ("vectorized", "legacy"):
+        raise ValueError(f"unknown parser {parser!r}; "
+                         "expected 'vectorized' or 'legacy'")
     if splits is None:
         splits = source.splits()
     n = int(mesh.shape[axis])
     bins = assign_splits(splits, n)
     if workers is None:
-        workers = default_workers(source.backend, len(splits))
+        workers = default_workers(source.backend, len(splits), parser)
 
     backend, fmt = source.backend, source.fmt
 
-    def read_one(sp: InputSplit) -> List[bytes]:
-        # fetch + decode of one split (possibly on a pool thread — spans
+    def read_one(sp: InputSplit) -> RecordBatch:
+        # fetch + frame of one split (possibly on a pool thread — spans
         # record their thread, so the trace shows pool parallelism)
         with span("ingest.fetch", path=sp.path, start=sp.start,
                   length=sp.length):
-            recs = fmt.read_split(backend, sp)
+            payload = fmt.read_payload(backend, sp)
+        with span("ingest.frame", path=sp.path, bytes=len(payload)):
+            if parser == "legacy":
+                batch = RecordBatch.from_records(
+                    fmt.parse(payload) if payload else [])
+            else:
+                batch = fmt.frame(payload)
         METRICS.counter("ingest.splits").inc()
-        METRICS.counter("ingest.records").inc(len(recs))
-        return recs
+        METRICS.counter("ingest.records").inc(len(batch))
+        return batch
 
-    with span("ingest", splits=len(splits), shards=n, workers=workers):
-        if workers <= 1:
-            # serial fast path: no executor, no future bookkeeping
-            shard_recs: List[List[bytes]] = [
-                [r for sp in b for r in read_one(sp)] for b in bins]
-        else:
-            with ThreadPoolExecutor(max_workers=workers) as pool:
-                # one future per split, grouped per shard in plan order
-                futs = [[pool.submit(read_one, sp) for sp in b]
-                        for b in bins]
-                shard_recs = [
-                    [r for f in shard for r in f.result()]
-                    for shard in futs]
+    def read_bin(b: Sequence[InputSplit]) -> List[RecordBatch]:
+        return [read_one(sp) for sp in b]
 
-        max_count = max((len(r) for r in shard_recs), default=0)
-        max_width = max((len(rec) for recs in shard_recs for rec in recs),
+    latency = float(getattr(backend, "latency_s", 0.0) or 0.0)
+
+    def geometry(shard_batches: List[List[RecordBatch]]):
+        counts = [sum(len(b) for b in bs) for bs in shard_batches]
+        max_count = max(counts, default=0)
+        max_width = max((b.max_len for bs in shard_batches for b in bs),
                         default=0)
         cap = capacity if capacity is not None else _round_up(max_count,
                                                               _CAP_BUCKET)
@@ -101,17 +148,53 @@ def ingest(source: DataSource, mesh: Mesh, axis: str = "data",
                 "raise `capacity` or stream via repro.io.waves")
         if max_width > w:
             raise ValueError(f"record length {max_width} exceeds width {w}")
+        return counts, cap, w
 
-        counts = [len(r) for r in shard_recs]
+    def make_pack_one(cap: int, w: int):
+        def pack_one(batches: List[RecordBatch], count: int, shard: int):
+            # one gather per batch straight out of the framed payload
+            # buffers — the columnar fast path; the legacy parser goes
+            # through the row-at-a-time oracle packer
+            with span("ingest.gather", shard=shard, records=count):
+                if parser == "legacy":
+                    recs = [r for b in batches for r in b.to_list()]
+                    return pack_records(recs, capacity=cap, width=w)
+                return pack_batches(batches, capacity=cap, width=w)
+        return pack_one
 
-        def pack_one(recs: List[bytes], shard: int):
-            with span("ingest.pack", shard=shard, records=len(recs)):
-                return pack_records(recs, capacity=cap, width=w)
-
-        # lazy generator: each shard packs during the previous shard's
-        # device transfer (double buffering preserved)
-        packed = (pack_one(recs, i) for i, recs in enumerate(shard_recs))
-        with span("ingest.device_put", shards=n, capacity=cap, width=w):
+    with span("ingest", splits=len(splits), shards=n, workers=workers,
+              parser=parser):
+        if workers <= 1:
+            # serial fast path: no executor, no future bookkeeping
+            shard_batches: List[List[RecordBatch]] = [
+                read_bin(b) for b in bins]
+        elif latency <= 0.0:
+            # latency-free pooled: per-split futures would drown the
+            # (fast, vectorized) per-split work in pool bookkeeping —
+            # one task per shard bin, so whole shards fetch+frame
+            # concurrently
+            pool = _pool(workers)
+            shard_batches = [
+                f.result() for f in
+                [pool.submit(read_bin, b) for b in bins]]
+        else:
+            # latency-bound: one future per split (grouped per shard in
+            # plan order) so every request's wait overlaps
+            pool = _pool(workers)
+            futs = [[pool.submit(read_one, sp) for sp in b]
+                    for b in bins]
+            shard_batches = [[f.result() for f in shard]
+                             for shard in futs]
+        counts, cap, w = geometry(shard_batches)
+        pack_one = make_pack_one(cap, w)
+        # geometry is a barrier (capacity/width need every shard's
+        # extents), so packing can't race the fetches anyway — a lazy
+        # generator double-buffers instead: shard s packs while shard
+        # s-1's device transfer drains, with zero future bookkeeping
+        packed = (pack_one(bs, counts[i], i)
+                  for i, bs in enumerate(shard_batches))
+        with span("ingest.device_put", shards=n, capacity=cap,
+                  width=w):
             ds = from_shard_arrays(packed, counts, mesh, axis)
     # content-keyed lineage root: re-ingesting the same byte ranges with
     # the same pack geometry reaches materializations persisted earlier

@@ -82,7 +82,8 @@ class WaveRunner:
                  registry: Registry = DEFAULT_REGISTRY,
                  prefetch: bool = True,
                  plan_cache: Optional["planner_lib.PlanCache"] = None,
-                 executor: Optional[Executor] = None):
+                 executor: Optional[Executor] = None,
+                 parser: str = "vectorized"):
         if mesh is None:
             mesh = compat.make_mesh((jax.device_count(),), (axis,))
         self.source = source
@@ -92,6 +93,10 @@ class WaveRunner:
         self.workers = workers
         self.capacity = capacity
         self.width = width
+        #: Framing implementation forwarded to every wave's ingest —
+        #: "vectorized" columnar RecordBatch (default) or the "legacy"
+        #: per-line oracle; waves inherit the columnar win wholesale.
+        self.parser = parser
         self.registry = registry
         self.prefetch = prefetch
         self.plan_cache = plan_cache
@@ -145,7 +150,8 @@ class WaveRunner:
         with span("wave.ingest", index=idx, splits=len(wave)):
             return ingest(self.source, self.mesh, axis=self.axis,
                           capacity=self.capacity, width=self.width,
-                          workers=self.workers, splits=wave)
+                          workers=self.workers, splits=wave,
+                          parser=self.parser)
 
     def _await_wave(self, handle, idx: int):
         """Block for one wave's async action; the wave span links the

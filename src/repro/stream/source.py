@@ -76,11 +76,16 @@ class ContinuousSource:
     def __init__(self, source: DataSource, mesh: Mesh, axis: str = "data",
                  capacity: Optional[int] = None,
                  width: Optional[int] = None,
-                 workers: Optional[int] = None) -> None:
+                 workers: Optional[int] = None,
+                 parser: str = "vectorized") -> None:
         self.source = source
         self.mesh = mesh
         self.axis = axis
         self.workers = workers
+        #: Framing implementation for every epoch's ingest ("vectorized"
+        #: columnar RecordBatch by default) — epochs are latency-critical,
+        #: so deltas ride the same zero-copy path as batch ingestion.
+        self.parser = parser
         #: Pinned pack geometry (fixed after the first ingested epoch).
         self.capacity = capacity
         self.width = width
@@ -118,7 +123,8 @@ class ContinuousSource:
                   splits=batch.num_splits):
             ds = ingest(self.source, self.mesh, axis=self.axis,
                         capacity=self.capacity, width=self.width,
-                        workers=self.workers, splits=list(batch.splits))
+                        workers=self.workers, splits=list(batch.splits),
+                        parser=self.parser)
         with self._lock:
             # first epoch fixes the geometry every later epoch reuses —
             # identical shapes are what make the delta plan a compile-

@@ -1,5 +1,6 @@
 """repro.io: backends, split planning, record formats, parallel ingest."""
 import os
+import tempfile
 
 import numpy as np
 import pytest
@@ -133,6 +134,139 @@ def test_pack_unpack_roundtrip():
         pack_records(recs, capacity=2)
     with pytest.raises(ValueError):
         pack_records(recs, width=2)
+
+
+# -- columnar framing: parity + split-carving properties ---------------------
+
+def _random_payload(fmt_name: str, rng: np.random.Generator) -> bytes:
+    """Adversarial per-format payloads: empty lines, whitespace-only
+    lines, CR before LF, trailing record with no final newline, runs of
+    FASTA headers (so small splits can be header-only), SMILES lines with
+    multi-space separators and missing metadata."""
+    lines = []
+    for _ in range(int(rng.integers(0, 40))):
+        kind = rng.random()
+        body = "".join(rng.choice(list("ACGTacgt01xyz"),
+                                  size=int(rng.integers(0, 12))))
+        if kind < 0.12:
+            lines.append("")                          # empty line
+        elif kind < 0.2:
+            lines.append(" \t " if fmt_name != "smiles" else "  ")
+        elif kind < 0.35 and fmt_name == "fasta":
+            lines.append(rng.choice([">", ";"]) + "hdr " + body)
+        elif kind < 0.35 and fmt_name == "smiles":
+            lines.append(body + rng.choice(["", " name 42", "\tmeta",
+                                            "  two  spaces"]))
+        elif kind < 0.45:
+            lines.append(body + "\r")                 # CR before the LF
+        else:
+            lines.append(body)
+    payload = "\n".join(lines)
+    if lines and rng.random() < 0.7:
+        payload += "\n"                               # maybe no trailing \n
+    return payload.encode()
+
+
+def test_frame_matches_parse_on_adversarial_payloads():
+    """Byte parity of the vectorized columnar framing against the legacy
+    per-line parser across all three formats and 150 random payloads
+    (plus the hand-picked edge cases)."""
+    from repro.io.formats import FORMATS
+    fixed = [b"", b"\n", b"\n\n\n", b"abc", b"abc\n", b"a\n\nb\n",
+             b" \t\n x \n", b">only-header\n", b">h1\n>h2\n;h3\n",
+             b"tok rest\n\ntok2\t\n", b"a\r\nb\r\n", b"x"]
+    rng = np.random.default_rng(7)
+    for name, fmt in FORMATS.items():
+        payloads = fixed + [_random_payload(name, rng) for _ in range(50)]
+        for payload in payloads:
+            legacy = fmt.parse(payload)
+            batch = fmt.frame(payload)
+            assert batch.to_list() == legacy, (name, payload)
+
+
+def test_split_carving_exactly_once_property():
+    """The InputFormat ownership rule as a property: for random contents
+    and random split boundaries, the union of per-split records equals
+    the whole-file parse — every record exactly once, in order — on both
+    the legacy and the columnar batch read paths."""
+    from repro.io.formats import FORMATS
+    from repro.io.splits import InputSplit
+    rng = np.random.default_rng(11)
+    for name, fmt in FORMATS.items():
+        for trial in range(12):
+            payload = _random_payload(name, rng)
+            if not payload:
+                continue
+            expected = fmt.parse(payload)
+            # random carve: sorted unique cut points over [0, size]
+            ncuts = int(rng.integers(0, 8))
+            cuts = sorted({0, len(payload),
+                           *rng.integers(1, max(len(payload), 2),
+                                         size=ncuts).tolist()})
+            with tempfile.NamedTemporaryFile(suffix=".dat") as f:
+                f.write(payload)
+                f.flush()
+                be = LocalFS(f.name)
+                splits = [InputSplit(f.name, a, b, len(payload))
+                          for a, b in zip(cuts, cuts[1:])]
+                legacy = [r for sp in splits
+                          for r in fmt.read_split(be, sp)]
+                batched = [r for sp in splits
+                           for r in fmt.read_split_batch(be, sp).to_list()]
+            assert legacy == expected, (name, trial, cuts, payload)
+            assert batched == expected, (name, trial, cuts, payload)
+
+
+def test_pack_batches_matches_pack_records_oracle():
+    """One bulk gather == row-at-a-time packing, over ragged batches
+    including zero-length records, empty batches and uniform-stride
+    (fast-path) batches."""
+    from repro.io.formats import RecordBatch, pack_batches
+    rng = np.random.default_rng(3)
+    cases = [
+        [],                                           # no batches at all
+        [[]],                                         # one empty batch
+        [[b""], [b"", b""]],                          # zero-length records
+        [[b"abc", b"de", b"", b"fghij"]],             # ragged
+        [[b"aaaa"] * 5],                              # uniform fast path
+        [[b"xy"], [], [b"z" * 30, b""], [b"q"] * 3],  # mixed
+    ]
+    for _ in range(10):
+        cases.append([[bytes(rng.integers(0, 256, int(rng.integers(0, 9)),
+                                          dtype=np.uint8).tobytes())
+                       for _ in range(int(rng.integers(0, 7)))]
+                      for _ in range(int(rng.integers(1, 4)))])
+    for recs_per_batch in cases:
+        flat = [r for recs in recs_per_batch for r in recs]
+        cap = max(len(flat), 1) + int(rng.integers(0, 4))
+        w = max((len(r) for r in flat), default=1) + int(rng.integers(0, 4))
+        w = max(w, 1)
+        oracle = pack_records(flat, capacity=cap, width=w)
+        batches = [RecordBatch.from_records(recs)
+                   for recs in recs_per_batch]
+        got = pack_batches(batches, capacity=cap, width=w)
+        np.testing.assert_array_equal(got["data"], oracle["data"])
+        np.testing.assert_array_equal(got["len"], oracle["len"])
+    with pytest.raises(ValueError):
+        pack_batches([RecordBatch.from_records([b"abc"])], width=2)
+    with pytest.raises(ValueError):
+        pack_batches([RecordBatch.from_records([b"a", b"b"])], capacity=1)
+
+
+def test_ingest_parser_parity_and_validation(text_file):
+    """End-to-end vectorized ingest == legacy ingest (same device bytes),
+    pooled == serial, and unknown parser names raise."""
+    path, _ = text_file
+    mesh = compat.make_mesh((1,), ("data",))
+    ref = collect(ingest(text_source(path, split_bytes=128), mesh,
+                         parser="legacy"))
+    for workers in (1, 4):
+        out = collect(ingest(text_source(path, split_bytes=128), mesh,
+                             workers=workers))
+        np.testing.assert_array_equal(out["data"], ref["data"])
+        np.testing.assert_array_equal(out["len"], ref["len"])
+    with pytest.raises(ValueError, match="parser"):
+        ingest(text_source(path), mesh, parser="simd")
 
 
 # -- ingestion ---------------------------------------------------------------

@@ -135,7 +135,8 @@ def test_traced_action_exports_nested_spans_and_phases(tmp_path):
     with open(out) as f:
         evs = json.load(f)["traceEvents"]
     names = {e["name"] for e in evs}
-    assert {"ingest", "ingest.fetch", "ingest.pack", "ingest.device_put",
+    assert {"ingest", "ingest.fetch", "ingest.frame", "ingest.gather",
+            "ingest.device_put",
             "action", "plan.typecheck", "plan.build", "plan.lower",
             "plan.compile", "dispatch", "counter_sync"} <= names
 
